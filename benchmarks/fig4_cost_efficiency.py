@@ -1,0 +1,51 @@
+"""Fig. 4 reproduction: latency + cost-efficiency (PSNR/latency) bars,
+NGP-CAQ vs HERO, per scene and level — rendered as ASCII bars."""
+from __future__ import annotations
+
+from benchmarks.common import SCENES, load_all
+
+
+def _bar(v, vmax, width=34):
+    n = int(round(width * v / vmax)) if vmax else 0
+    return "#" * n
+
+
+def render(scale_name: str = "standard") -> str:
+    data = load_all(scale_name)
+    if not data:
+        return "(no results; run benchmarks.run first)"
+    lines = ["", "FIG. 4 (reproduction): CAQ vs HERO", "=" * 72]
+    for metric, label, better in (
+        ("latency_cycles", "(a) latency [cycles] (lower better)", "low"),
+        ("cost_efficiency", "(b) cost efficiency [PSNR/cycle] (higher better)", "high"),
+    ):
+        lines.append(f"\n{label}")
+        vals = {}
+        for (s, level), d in data.items():
+            for m in ("NGP-CAQ", "HERO"):
+                row = next(r for r in d["rows"] if r["name"] == m)
+                vals[(s, level, m)] = row[metric]
+        vmax = max(vals.values()) if vals else 1.0
+        for level in ("MDL", "MGL"):
+            for s in SCENES:
+                for m in ("NGP-CAQ", "HERO"):
+                    v = vals.get((s, level, m))
+                    if v is None:
+                        continue
+                    lines.append(
+                        f"  {level:3s} {s:6s} {m:8s} "
+                        f"{_bar(v, vmax)} {v:.3e}"
+                    )
+            lines.append("")
+        h = [vals[k] for k in vals if k[2] == "HERO"]
+        c = [vals[k] for k in vals if k[2] == "NGP-CAQ"]
+        if h and c:
+            r = (sum(c) / len(c)) / (sum(h) / len(h))
+            if better == "high":
+                r = 1.0 / r
+            lines.append(f"  mean HERO advantage: {r:.2f}x")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render())

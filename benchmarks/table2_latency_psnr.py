@@ -1,0 +1,80 @@
+"""Table II reproduction: latency (cycles/ray) + PSNR per method, per scene,
+at MDL and MGL operating levels."""
+from __future__ import annotations
+
+from benchmarks.common import SCALES, SCENES, load_all, run_scene_level
+
+
+def compute(scale_name: str = "standard", verbose: bool = True):
+    scale = SCALES[scale_name]
+    for scene in SCENES:
+        for level in ("MDL", "MGL"):
+            run_scene_level(scene, level, scale, verbose=verbose)
+
+
+def render(scale_name: str = "standard") -> str:
+    data = load_all(scale_name)
+    if not data:
+        return "(no results; run benchmarks.run first)"
+    lines = [
+        "",
+        "TABLE II (reproduction): latency (cycles/ray, lower better) and "
+        "PSNR (dB, higher better)",
+        "=" * 98,
+    ]
+    methods = ["NGP", "NGP-PTQ", "NGP-QAT", "NGP-CAQ", "HERO"]
+    for level in ("MDL", "MGL"):
+        lines.append(f"\n-- {level} --")
+        hdr = f"{'method':10s}" + "".join(
+            f" | {s:>9s} lat {s:>6s} psnr" for s in SCENES
+        ) + " |   avg lat  avg psnr"
+        lines.append(hdr)
+        lines.append("-" * len(hdr))
+        for m in methods:
+            lats, psnrs, cells = [], [], []
+            for s in SCENES:
+                d = data.get((s, level))
+                if d is None:
+                    cells.append(" " * 26)
+                    continue
+                row = next(r for r in d["rows"] if r["name"] == m)
+                n_rays = 1  # latency normalized per trace ray inside env
+                lat = row["latency_cycles"]
+                if lat is None:
+                    cells.append(f" | {'/':>13s} {row['psnr']:11.2f}")
+                    psnrs.append(row["psnr"])
+                    continue
+                lats.append(lat)
+                psnrs.append(row["psnr"])
+                cells.append(f" | {lat:13.3e} {row['psnr']:11.2f}")
+            avg_l = sum(lats) / len(lats) if lats else float("nan")
+            avg_p = sum(psnrs) / len(psnrs) if psnrs else float("nan")
+            lines.append(
+                f"{m:10s}" + "".join(cells)
+                + (f" | {avg_l:9.3e} {avg_p:9.2f}" if lats
+                   else f" | {'/':>9s} {avg_p:9.2f}")
+            )
+    # headline claim check: HERO latency < CAQ latency at both levels
+    lines.append("")
+    for level in ("MDL", "MGL"):
+        hs, cs = [], []
+        for s in SCENES:
+            d = data.get((s, level))
+            if d is None:
+                continue
+            hs.append(next(r for r in d["rows"] if r["name"] == "HERO")
+                      ["latency_cycles"])
+            cs.append(next(r for r in d["rows"] if r["name"] == "NGP-CAQ")
+                      ["latency_cycles"])
+        if hs:
+            ratio = (sum(cs) / len(cs)) / (sum(hs) / len(hs))
+            lines.append(
+                f"{level}: CAQ/HERO latency ratio = {ratio:.2f}x "
+                f"(paper: 1.33x MDL / 1.31x MGL)"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    compute()
+    print(render())

@@ -1,0 +1,19 @@
+"""End-to-end distributed training driver demo (deliverable b): train an
+assigned-arch smoke model for a few hundred steps with checkpoint/restart.
+
+Thin wrapper over repro.launch.train — kill it mid-run and re-invoke with
+--resume to see the fault-tolerance path (atomic checkpoint + exact data
+resume).
+
+  PYTHONPATH=src python examples/distributed_train.py
+"""
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    train_main([
+        "--arch", "llama3-405b", "--smoke",
+        "--steps", "200", "--seq-len", "128",
+        "--global-batch", "8", "--accum", "2",
+        "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "50",
+        "--resume",
+    ])

@@ -1,0 +1,84 @@
+"""Fig. 5-style qualitative comparison: render a held-out view under
+full precision / PTQ / a HERO-style mixed policy and report per-image
+PSNR + save PGM images (no imaging deps needed).
+
+  PYTHONPATH=src python examples/render_compare.py --out /tmp/renders
+"""
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import ngp as ngp_cfg
+from repro.core import EnvConfig, NGPQuantEnv
+from repro.nerf.dataset import make_dataset
+from repro.nerf.ngp import spec_from_policy, uniform_quant_spec
+from repro.nerf.scenes import SceneConfig
+from repro.nerf.train import render_test_view, train_ngp
+from repro.quant.policy import QuantPolicy
+
+
+def save_ppm(path: Path, img: np.ndarray):
+    """Tiny PPM writer (P6) — viewable everywhere, zero dependencies."""
+    h, w = img.shape[:2]
+    data = (np.clip(img, 0, 1) * 255).astype(np.uint8)
+    with open(path, "wb") as f:
+        f.write(f"P6\n{w} {h}\n255\n".encode())
+        f.write(data.tobytes())
+
+
+def psnr(a, b):
+    mse = float(np.mean((a - b) ** 2))
+    return -10 * np.log10(max(mse, 1e-12))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="/tmp/renders")
+    ap.add_argument("--scene", default="chair")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    ds = make_dataset(SceneConfig(name=args.scene, image_hw=32,
+                                  n_train_views=8, n_test_views=2))
+    cfg = ngp_cfg.cpu_scale()
+    rcfg = ngp_cfg.cpu_render()
+    tcfg = ngp_cfg.cpu_train()
+    params, _ = train_ngp(ds, cfg, rcfg, tcfg)
+    env = NGPQuantEnv(params, ds, cfg, rcfg, tcfg,
+                      EnvConfig(finetune_steps=25, trace_rays=256))
+
+    gt = ds.test_rgb[0].reshape(32, 32, 3)
+    save_ppm(out / "ground_truth.ppm", gt)
+
+    renders = {}
+    renders["full_precision"] = render_test_view(params, ds, cfg, rcfg, 0)
+
+    # PTQ 4-bit (aggressive, shows artifacts like the paper's Fig. 5 PTQ)
+    spec4 = uniform_quant_spec(cfg, 4, env.act_ranges)
+    renders["ptq_4bit"] = render_test_view(params, ds, cfg, rcfg, 0, spec4)
+
+    # HERO-style mixed policy: coarse hash levels high, fine low; sensitive
+    # first/last layers high (finetuned like an episode evaluation).
+    n_hash = cfg.hash.n_levels
+    bits = ([7] * (n_hash // 2) + [4] * (n_hash - n_hash // 2)
+            + [6, 6, 7, 7, 5, 5, 5, 5, 6, 6])[: env.n_units]
+    bits += [6] * (env.n_units - len(bits))
+    res = env.evaluate_bits(bits)
+    ft = env.params  # render with the finetuned copy via evaluate path
+    spec = spec_from_policy(
+        cfg, QuantPolicy.uniform(env.units, 8).with_bits(bits), env.act_ranges
+    )
+    renders["hero_mixed"] = render_test_view(params, ds, cfg, rcfg, 0, spec)
+
+    print(f"{'render':16s} {'PSNR vs GT':>10s}")
+    for name, img in renders.items():
+        save_ppm(out / f"{name}.ppm", img)
+        print(f"{name:16s} {psnr(img, gt):10.2f}  -> {out}/{name}.ppm")
+    print(f"\nmixed-policy episode: PSNR {res.psnr:.2f} dB, "
+          f"latency {res.latency_cycles:.3e} cycles, FQR {res.fqr:.2f}")
+
+
+if __name__ == "__main__":
+    main()

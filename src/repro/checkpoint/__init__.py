@@ -1,0 +1,15 @@
+"""Fault-tolerant checkpointing: step-atomic save/restore with elastic
+re-sharding."""
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+]

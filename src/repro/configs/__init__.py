@@ -1,0 +1,57 @@
+"""Arch registry: --arch <id> -> ArchSpec (exact published configs)."""
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ArchSpec, ShapeSpec
+from repro.configs.base import (
+    decode_input_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "granite-34b": "repro.configs.granite_34b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+_CACHE: Dict[str, ArchSpec] = {}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    if arch_id not in _CACHE:
+        import importlib
+
+        _CACHE[arch_id] = importlib.import_module(_MODULES[arch_id]).spec()
+    return _CACHE[arch_id]
+
+
+def all_cells():
+    """Every (arch, shape) pair, with assignment-recorded skips excluded."""
+    for aid in ARCH_IDS:
+        spec = get_arch(aid)
+        for shape in SHAPES.values():
+            if spec.runs(shape.name):
+                yield spec, shape
+
+
+__all__ = [
+    "SHAPES",
+    "ArchSpec",
+    "ShapeSpec",
+    "ARCH_IDS",
+    "get_arch",
+    "all_cells",
+    "train_input_specs",
+    "prefill_input_specs",
+    "decode_input_specs",
+]

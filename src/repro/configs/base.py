@@ -1,0 +1,96 @@
+"""Config substrate: shape grid, ArchSpec, input specs for the dry-run.
+
+Every assigned architecture file exports `spec() -> ArchSpec` with the
+exact published config plus a reduced `smoke` config of the same family
+(used by per-arch CPU smoke tests; the full config is exercised only via
+.lower()/.compile() with ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    model: ModelConfig
+    smoke: ModelConfig
+    # Training microbatch (global sequences per accumulation step), per shape.
+    microbatch: Mapping[str, int] = dataclasses.field(
+        default_factory=lambda: {"train_4k": 32}
+    )
+    moment_dtype: str = "float32"  # adam moments; "int8" = 8-bit Adam
+    # shape name -> reason, for assignment-recorded skips
+    skips: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    source: str = ""
+    # Small models: disable tensor parallelism (replicate weights, pure DP)
+    no_tp: bool = False
+
+    def runs(self, shape: str) -> bool:
+        return shape not in self.skips
+
+
+def _frontend_extras(
+    model: ModelConfig, batch: int, seq: int
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], int]:
+    """Modality-stub inputs + number of text tokens."""
+    extras: Dict[str, jax.ShapeDtypeStruct] = {}
+    text = seq
+    if model.embed_frontend == "prefix_patches":
+        p = model.n_prefix_patches
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (batch, p, model.d_model), model.param_dtype
+        )
+        text = seq - p
+    elif model.embed_frontend == "stub_frames":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (batch, model.max_source_len, model.d_model), model.param_dtype
+        )
+    return extras, text
+
+
+def train_input_specs(
+    model: ModelConfig, shape: ShapeSpec, microbatch: Optional[int] = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """One accumulation microbatch (the train_step scans over these)."""
+    b = microbatch or shape.global_batch
+    extras, text = _frontend_extras(model, b, shape.seq_len)
+    return {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32), **extras}
+
+
+def prefill_input_specs(
+    model: ModelConfig, shape: ShapeSpec
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    extras, text = _frontend_extras(model, b, shape.seq_len)
+    return {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32), **extras}
+
+
+def decode_input_specs(model: ModelConfig, shape: ShapeSpec):
+    """(tokens, pos) for decode_step; the cache comes from cache_specs."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,43 @@
+"""HERO core: the paper's contribution.
+
+- ddpg:      deep deterministic policy gradient agent (pure JAX actor/critic)
+- action:    continuous action -> bit width mapping (Eq. 3)
+- reward:    hardware-aware reward (Eqs. 8-9)
+- env:       NGP quantization environment (observation Eqs. 1-2, episode
+             walk, constraint enforcement, finetune + PSNR + simulator)
+- search:    the episodic HERO search loop
+- baselines: PTQ / QAT / CAQ-proxy comparison methods
+- lm_env:    the same technique applied to the assigned LM architectures,
+             with a TPU roofline cost model as hardware feedback
+"""
+from repro.core.action import action_to_bits, bits_to_action
+from repro.core.ddpg import DDPGAgent, DDPGConfig, ReplayBuffer
+from repro.core.reward import hero_reward, cost_ratio
+from repro.core.env import NGPQuantEnv, EnvConfig, EpisodeResult
+from repro.core.search import hero_search, SearchConfig, SearchResult
+from repro.core.baselines import (
+    ptq_baseline,
+    qat_baseline,
+    caq_proxy_baseline,
+    BaselineResult,
+)
+
+__all__ = [
+    "action_to_bits",
+    "bits_to_action",
+    "DDPGAgent",
+    "DDPGConfig",
+    "ReplayBuffer",
+    "hero_reward",
+    "cost_ratio",
+    "NGPQuantEnv",
+    "EnvConfig",
+    "EpisodeResult",
+    "hero_search",
+    "SearchConfig",
+    "SearchResult",
+    "ptq_baseline",
+    "qat_baseline",
+    "caq_proxy_baseline",
+    "BaselineResult",
+]

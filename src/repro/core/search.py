@@ -1,0 +1,103 @@
+"""The HERO search loop: episodic DDPG over the quantization design space.
+
+Per episode (Sec. III-E):
+  1. walk every unit, agent picks a continuous action (obs Eqs. 1-2, noise);
+  2. map actions -> bits (Eq. 3), enforce the latency target if configured;
+  3. retrain briefly + evaluate PSNR + simulate latency -> reward (Eq. 8);
+  4. push the episode's transitions (each carrying the final reward) into
+     the replay buffer and run critic/actor updates (Eqs. 10-11).
+
+Returns the best policy by reward plus the full search log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.action import bits_to_action
+from repro.core.ddpg import DDPGAgent, DDPGConfig
+from repro.core.env import EpisodeResult, NGPQuantEnv
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    n_episodes: int = 40
+    finetune_steps: Optional[int] = None  # None -> env default
+    verbose: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: EpisodeResult
+    history: List[EpisodeResult]
+    wall_seconds: float
+
+    def reward_curve(self) -> List[float]:
+        return [h.reward for h in self.history]
+
+
+def hero_search(
+    env: NGPQuantEnv,
+    scfg: SearchConfig = SearchConfig(),
+    dcfg: Optional[DDPGConfig] = None,
+) -> SearchResult:
+    t_start = time.time()
+    agent = DDPGAgent(dcfg or DDPGConfig(seed=scfg.seed))
+
+    best: Optional[EpisodeResult] = None
+    history: List[EpisodeResult] = []
+
+    for ep in range(scfg.n_episodes):
+        # --- act over the unit walk -------------------------------------
+        actions: List[float] = []
+        observations: List[np.ndarray] = []
+        prev_action = 1.0  # convention: "full precision so far"
+        for i in range(env.n_units):
+            obs = env.observation(i, prev_action)
+            a = agent.act(obs, explore=True)
+            observations.append(obs)
+            actions.append(a)
+            prev_action = a
+
+        # --- bits + constraints -----------------------------------------
+        bits = env.actions_to_bits(actions)
+        bits = env.enforce_latency_target(bits)
+        # The executed actions are the (possibly constraint-clamped) bits —
+        # feed those back so the critic sees what actually ran.
+        executed = [bits_to_action(b, env.ecfg.b_min, env.ecfg.b_max) for b in bits]
+
+        # --- evaluate ------------------------------------------------------
+        result = env.evaluate_bits(bits, scfg.finetune_steps)
+        history.append(result)
+        if best is None or result.reward > best.reward:
+            best = result
+
+        # --- learn ---------------------------------------------------------
+        transitions = []
+        for i in range(env.n_units):
+            nobs = (
+                env.observation(i + 1, executed[i])
+                if i + 1 < env.n_units
+                else np.zeros_like(observations[i])
+            )
+            done = i + 1 == env.n_units
+            transitions.append((observations[i], [executed[i]], nobs, done))
+        agent.observe_episode(transitions, result.reward)
+        closs, aloss = agent.update()
+
+        if scfg.verbose:
+            print(
+                f"[hero] ep {ep:3d} reward={result.reward:+.4f} "
+                f"psnr={result.psnr:.2f} lat={result.latency_cycles:.3e} "
+                f"fqr={result.fqr:.2f} closs={closs:.4f} "
+                f"sigma={agent.noise_sigma:.3f} ({result.wall_seconds:.1f}s)",
+                flush=True,
+            )
+
+    return SearchResult(
+        best=best, history=history, wall_seconds=time.time() - t_start
+    )

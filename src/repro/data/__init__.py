@@ -1,0 +1,4 @@
+"""Data substrate: deterministic synthetic token pipeline + NGP ray batches."""
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+
+__all__ = ["TokenPipeline", "TokenPipelineConfig"]

@@ -1,0 +1,35 @@
+"""Distribution substrate: sharding rules, HLO/roofline analysis,
+fault tolerance, gradient compression."""
+from repro.distributed.sharding import (
+    ShardingConfig,
+    param_pspecs,
+    cache_pspecs,
+    data_pspecs,
+    batch_axes,
+    named,
+    validate_divisibility,
+)
+from repro.distributed.hlo_analysis import (
+    ChipSpec,
+    CollectiveStats,
+    RooflineTerms,
+    parse_collectives,
+    op_census,
+    roofline_terms,
+)
+
+__all__ = [
+    "ShardingConfig",
+    "param_pspecs",
+    "cache_pspecs",
+    "data_pspecs",
+    "batch_axes",
+    "named",
+    "validate_divisibility",
+    "ChipSpec",
+    "CollectiveStats",
+    "RooflineTerms",
+    "parse_collectives",
+    "op_census",
+    "roofline_terms",
+]

@@ -1,0 +1,95 @@
+"""Failure / straggler handling policy (DESIGN.md §5, §10).
+
+The framework's fault-tolerance contract at 1000+ nodes:
+
+1. **Step-atomic state.** The train step is a pure function
+   (params, opt, batch) -> (params, opt, metrics); all durable state is the
+   (checkpointed) triple (params, opt, data_step). There is nothing else to
+   lose.
+2. **Worker loss = restore + replay.** The data pipeline is counter-based
+   (repro/data), so any replacement worker resumes the EXACT batch stream
+   from the manifest's data_step — no coordination beyond the checkpoint.
+3. **Elastic rescale.** Checkpoints re-shard at restore time onto whatever
+   mesh exists (repro/checkpoint.restore_checkpoint(shardings=...)):
+   a 2-pod job that loses a pod restarts single-pod with doubled
+   accumulation (same global batch), governed by `plan_rescale` below.
+4. **Straggler mitigation.** Synchronous SPMD cannot skip a chip mid-step;
+   mitigation is operational: the `StepWatchdog` flags steps exceeding a
+   latency SLO so the orchestrator can checkpoint-and-evict the slow host
+   (the standard TPU-pod practice), rather than silently degrading.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    """How to keep the global batch/schedule identical across a mesh change."""
+
+    old_dp: int
+    new_dp: int
+    old_accum: int
+    new_accum: int
+    microbatch_per_shard: int
+
+    @property
+    def global_batch(self) -> int:
+        return self.new_dp * self.microbatch_per_shard * self.new_accum
+
+
+def plan_rescale(
+    global_batch: int, microbatch_per_shard: int, old_dp: int, new_dp: int,
+    old_accum: Optional[int] = None,
+) -> RescalePlan:
+    """Recompute the accumulation factor so global batch is preserved when
+    the DP world size changes (pod loss or growth)."""
+    if global_batch % (new_dp * microbatch_per_shard) != 0:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by "
+            f"new_dp*microbatch = {new_dp * microbatch_per_shard}"
+        )
+    new_accum = global_batch // (new_dp * microbatch_per_shard)
+    return RescalePlan(
+        old_dp=old_dp,
+        new_dp=new_dp,
+        old_accum=old_accum or global_batch // (old_dp * microbatch_per_shard),
+        new_accum=new_accum,
+        microbatch_per_shard=microbatch_per_shard,
+    )
+
+
+class StepWatchdog:
+    """Flags slow steps against a rolling-median SLO (straggler signal)."""
+
+    def __init__(self, slo_factor: float = 2.0, window: int = 32,
+                 on_slow: Optional[Callable[[int, float, float], None]] = None):
+        self.slo_factor = slo_factor
+        self.window = window
+        self.on_slow = on_slow
+        self._durations: list = []
+        self._t0: Optional[float] = None
+        self.slow_steps: list = []
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> bool:
+        """Returns True if this step violated the SLO."""
+        assert self._t0 is not None, "start() not called"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        slow = False
+        if len(self._durations) >= 5:
+            med = sorted(self._durations)[len(self._durations) // 2]
+            if dt > self.slo_factor * med:
+                slow = True
+                self.slow_steps.append(step)
+                if self.on_slow:
+                    self.on_slow(step, dt, med)
+        self._durations.append(dt)
+        if len(self._durations) > self.window:
+            self._durations.pop(0)
+        return slow

@@ -1,0 +1,229 @@
+"""HLO analysis: collective bytes, op census, roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes but not collective traffic, so we
+parse the compiled (post-SPMD-partitioning) HLO text and sum operand sizes
+of every collective op. Per-device operand shapes are what appear in the
+compiled module, which is exactly the per-chip traffic we want.
+
+Byte accounting per op kind (N = devices in the replica group, s = operand
+bytes on one device):
+  all-gather       : each device sends s and receives (N-1)*s -> wire ~ N*s
+                     per group; per-device link bytes ~ (N-1)/N * output
+  all-reduce       : ring = 2*(N-1)/N * s per device
+  reduce-scatter   : (N-1)/N * s per device (s = unreduced input)
+  all-to-all       : (N-1)/N * s per device
+  collective-permute: s per device
+We report per-device *link* bytes under a bidirectional-ring model — the
+standard ICI roofline convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]  # per-device link bytes
+    wire_bytes: float  # sum over kinds
+    details: List[Tuple[str, float, int]]  # (kind, bytes, group_size)
+
+    @property
+    def total_bytes(self) -> float:
+        return self.wire_bytes
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int = 1) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    bbk: Dict[str, float] = {}
+    details = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match '  %name = <shape> <op>(' or fused op mentions
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None or op.endswith("-done"):
+            continue
+        out_bytes = _shape_bytes(m.group(1))
+        # operand bytes: shapes inside the call parens
+        paren = ls[m.end():]
+        in_bytes = _shape_bytes(paren.split("metadata=")[0])
+        N = max(_group_size(ls, n_devices), 1)
+        if kind == "all-gather":
+            link = out_bytes * (N - 1) / N
+        elif kind == "all-reduce":
+            link = 2.0 * out_bytes * (N - 1) / N
+        elif kind == "reduce-scatter":
+            link = in_bytes * (N - 1) / N
+        elif kind == "all-to-all":
+            link = in_bytes * (N - 1) / N
+        else:  # collective-permute
+            link = out_bytes
+        counts[kind] = counts.get(kind, 0) + 1
+        bbk[kind] = bbk.get(kind, 0.0) + link
+        details.append((kind, link, N))
+    return CollectiveStats(
+        counts=counts,
+        bytes_by_kind=bbk,
+        wire_bytes=float(sum(bbk.values())),
+        details=details,
+    )
+
+
+def op_census(hlo_text: str, ops: Tuple[str, ...] = ("reshape", "transpose",
+                                                     "fusion", "copy")) -> Dict[str, int]:
+    census: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?[\w.\-]+\s*=\s*(?:\([^)]*\)|[^\s]+)\s+([\w\-]+)", line)
+        if m:
+            op = m.group(1)
+            for want in ops:
+                if op == want:
+                    census[op] = census.get(op, 0) + 1
+    return census
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """TPU v5e (the assignment's hardware constants)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # FLOP/s
+    hbm_bw: float = 819e9  # B/s
+    ici_bw: float = 50e9  # B/s per link
+    hbm_bytes: float = 16e9
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound: perfectly-overlapped terms -> max; report max."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """(useful compute time) / (achievable step time)."""
+        if self.step_time_s == 0 or self.hlo_flops == 0:
+            return 0.0
+        useful_compute_s = (self.model_flops / self.hlo_flops) * self.compute_s
+        return useful_compute_s / self.step_time_s
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(
+    cost: Dict[str, float],
+    collectives: CollectiveStats,
+    n_devices: int,
+    chip: ChipSpec = ChipSpec(),
+    model_flops: float = 0.0,
+    flops_are_global: bool = True,
+) -> RooflineTerms:
+    """Build the three terms from cost_analysis() + the collective parse.
+
+    XLA's cost_analysis flops on SPMD-partitioned modules are per-device;
+    `flops_are_global=False` expects that. bytes accessed likewise.
+    """
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if flops_are_global:
+        per_dev_flops = flops / n_devices
+        per_dev_bytes = byts / n_devices
+    else:
+        per_dev_flops = flops
+        per_dev_bytes = byts
+    return RooflineTerms(
+        compute_s=per_dev_flops / chip.peak_flops_bf16,
+        memory_s=per_dev_bytes / chip.hbm_bw,
+        collective_s=collectives.wire_bytes / chip.ici_bw,
+        hlo_flops=per_dev_flops * n_devices,
+        hlo_bytes=per_dev_bytes * n_devices,
+        collective_bytes=collectives.wire_bytes,
+        model_flops=model_flops,
+    )

@@ -1,0 +1,429 @@
+"""Loop-aware HLO counters: FLOPs / HBM bytes / collective link bytes with
+while-loop trip-count multiplication.
+
+XLA's HloCostAnalysis (compiled.cost_analysis()) visits each while BODY
+exactly once, so any scanned program (grad-accumulation scan x layer scan x
+attention-chunk scan) under-counts by the product of trip counts — 3-4
+orders of magnitude here. This module re-walks the compiled, SPMD-
+partitioned HLO text with multipliers taken from each while op's
+`backend_config={"known_trip_count":{"n":...}}` (emitted by XLA when the
+induction variable is statically known, which holds for every lax.scan).
+
+Counting rules (per-device module => per-device numbers):
+  flops   : dot = 2 * prod(out dims) * prod(contracting dims of lhs);
+            fusion = inner dots + fusion output numel (elementwise approx);
+            other top-level elementwise = output numel; reduce = input numel.
+  bytes   : per top-level op: output + operand bytes (symbol table), not
+            descending into fused computations (fusion == one HBM round
+            trip); bitcast/tuple/GTE/parameter/constant free.
+  link    : all-gather (N-1)/N*out; all-reduce 2(N-1)/N*out;
+            reduce-scatter & all-to-all (N-1)/N*in; permute out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]+)\}")
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "reduce-scatter-start", "all-to-all-start",
+}
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "add-dependency", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "reduce-scatter-done", "all-to-all-done",
+    "partition-id", "replica-id",
+}
+
+
+def _shape_numel_bytes(shape_str: str) -> Tuple[float, float]:
+    numel_total, bytes_total = 0.0, 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class OpRec:
+    name: str
+    shape: str
+    kind: str
+    operands: List[str]
+    line: str
+
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "tanh", "exponential", "log", "negate", "abs", "sign", "rsqrt", "sqrt",
+    "convert", "select", "compare", "and", "or", "not", "xor", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "logistic",
+    "sine", "cosine", "atan2", "exponential-minus-one", "log-plus-one",
+    "broadcast", "iota", "reverse", "is-finite", "erf", "cbrt", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "popcnt",
+}
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpRec]
+    shapes: Dict[str, str]  # op name -> output shape string
+
+    _consumers: Optional[Dict[str, List[str]]] = None
+
+    def consumers(self) -> Dict[str, List[str]]:
+        """op name -> kinds of ops that consume it (within this comp)."""
+        if self._consumers is None:
+            c: Dict[str, List[str]] = {}
+            for op in self.ops:
+                for o in op.operands:
+                    c.setdefault(o, []).append(op.kind)
+            self._consumers = c
+        return self._consumers
+
+    def materializes(self, op: OpRec) -> bool:
+        """Under TPU producer-consumer fusion, an elementwise op's output
+        hits HBM only if some consumer is NOT elementwise (or it is the
+        computation root / unconsumed)."""
+        cons = self.consumers().get(op.name)
+        if not cons:
+            return True  # root or escapes the computation
+        return any(k not in _ELEMENTWISE for k in cons)
+
+
+def _split_operands(line: str, start: int) -> Tuple[List[str], str]:
+    """Operand %names inside the call parens; returns (names, attrs tail)."""
+    depth = 0
+    i = start
+    while i < len(line):
+        c = line[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    inner = line[start + 1 : i]
+    tail = line[i + 1 :]
+    names = re.findall(r"%([\w.\-]+)", inner)
+    return names, tail
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        header = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", line)
+        if header:
+            cur = Computation(header.group(2), [], {})
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            # parameters: "%p = f32[...] parameter(0)" matches _OP_RE; others skip
+            continue
+        name, shape, kind = m.group(1), m.group(2), m.group(3)
+        operands, _tail = _split_operands(line, m.end() - 1)
+        cur.ops.append(OpRec(name, shape, kind, operands, line))
+        cur.shapes[name] = shape
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Counters:
+    flops: float = 0.0
+    bytes: float = 0.0
+    link_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    # attribution: op name -> total (x multiplier) contribution
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    link_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add_coll(self, kind: str, link: float, mult: float):
+        self.coll_counts[kind] = self.coll_counts.get(kind, 0.0) + mult
+        self.coll_bytes[kind] = self.coll_bytes.get(kind, 0.0) + link * mult
+        self.link_bytes += link * mult
+
+    def top(self, table: Dict[str, float], n: int = 12):
+        return sorted(table.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _attr_comp(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _dot_flops(op: OpRec, comp: Computation) -> float:
+    out_dims = _shape_dims(op.shape)
+    out_numel = 1.0
+    for d in out_dims:
+        out_numel *= d
+    lhs_shape = comp.shapes.get(op.operands[0], "") if op.operands else ""
+    lhs_dims = _shape_dims(lhs_shape)
+    m = _CONTRACT_RE.search(op.line)
+    k = 1.0
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    elif lhs_dims:
+        k = lhs_dims[-1]
+    return 2.0 * out_numel * k
+
+
+def _fusion_flops(comp: Computation, comps: Dict[str, Computation]) -> float:
+    """Inner dot flops of a fused computation (recursively)."""
+    total = 0.0
+    for op in comp.ops:
+        if op.kind == "dot":
+            total += _dot_flops(op, comp)
+        elif op.kind == "fusion":
+            callee = _attr_comp(op.line, "calls")
+            if callee and callee in comps:
+                total += _fusion_flops(comps[callee], comps)
+    return total
+
+
+def _trip_count(op: OpRec, comps: Dict[str, Computation]) -> int:
+    """backend_config known_trip_count (optimized HLO), else the compare
+    constant in the condition computation (post-SPMD dumps)."""
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    cond = _attr_comp(op.line, "condition")
+    if cond and cond in comps:
+        best = 1
+        for c in comps[cond].ops:
+            if c.kind == "constant":
+                mc = re.search(r"constant\((\d+)\)", c.line)
+                if mc and "s32" in c.shape:
+                    best = max(best, int(mc.group(1)))
+        return best
+    return 1
+
+
+def analyze(
+    hlo: str, n_devices: int = 1, fused_bytes: bool = True
+) -> Counters:
+    """fused_bytes=True: optimized-HLO model (fusion = one HBM round trip,
+    op bytes = output + operands). fused_bytes=False: post-SPMD unfused
+    HLO — elementwise ops count OUTPUT bytes only (producer-consumer
+    fusion on TPU makes operand reads free), while dots / reduces /
+    collectives / slices keep operand accounting. Use False on
+    after_spmd-partitioning dumps, True on compiled.as_text()."""
+    comps, entry = parse_module(hlo)
+    out = Counters()
+    seen_guard: List[str] = []
+
+    def op_bytes(op: OpRec, comp: Computation, with_operands: bool = True) -> float:
+        _, b = _shape_numel_bytes(op.shape)
+        if not with_operands:
+            return b
+        for o in op.operands:
+            s = comp.shapes.get(o)
+            if s:
+                b += _shape_numel_bytes(s)[1]
+        return b
+
+    def op_tag(op: OpRec) -> str:
+        m = re.search(r'op_name="([^"]*)"', op.line)
+        tag = m.group(1) if m else op.name
+        return f"{op.kind}:{tag[-100:]}"
+
+    def slice_aware_bytes(op: OpRec, comp: Computation) -> Optional[float]:
+        """dynamic-(update-)slice touches the SLICE, not the whole buffer
+        (XLA updates in place). Applies to bare ops and fusions rooted at
+        them — without this, scan-stacking reads/writes are overcounted by
+        the full stacked-buffer size every iteration."""
+        root = op
+        if op.kind == "fusion":
+            callee = _attr_comp(op.line, "calls")
+            if not callee or callee not in comps:
+                return None
+            root = comps[callee].ops[-1] if comps[callee].ops else None
+            if root is None:
+                return None
+        if root.kind == "dynamic-update-slice":
+            # read+write of the updated slice (operand 1 of the root DUS)
+            upd = None
+            if len(root.operands) > 1:
+                upd = comps_shape_lookup(op, comp, root, 1)
+            if upd is not None:
+                return 2.0 * upd
+            return None
+        if root.kind == "dynamic-slice":
+            _, out_b = _shape_numel_bytes(op.shape)
+            return 2.0 * out_b
+        return None
+
+    def comps_shape_lookup(op: OpRec, comp: Computation, root: OpRec,
+                           idx: int) -> Optional[float]:
+        if op.kind != "fusion":
+            s = comp.shapes.get(root.operands[idx])
+            return _shape_numel_bytes(s)[1] if s else None
+        callee = comps[_attr_comp(op.line, "calls")]
+        s = callee.shapes.get(root.operands[idx])
+        return _shape_numel_bytes(s)[1] if s else None
+
+    def attribute(table: Dict[str, float], op: OpRec, v: float):
+        k = op_tag(op)
+        table[k] = table.get(k, 0.0) + v
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        if depth > 32 or comp_name not in comps:
+            return
+        comp = comps[comp_name]
+        for op in comp.ops:
+            if op.kind in _FREE_OPS and op.kind not in _COLLECTIVES:
+                continue
+            if op.kind == "while":
+                trip = _trip_count(op, comps)
+                body = _attr_comp(op.line, "body")
+                cond = _attr_comp(op.line, "condition")
+                if body:
+                    walk(body, mult * trip, depth + 1)
+                if cond:
+                    walk(cond, mult * trip, depth + 1)
+                continue
+            if op.kind == "conditional":
+                for branch in re.findall(r"branch_computations=\{([^}]*)\}",
+                                         op.line):
+                    for b in re.findall(r"%([\w.\-]+)", branch):
+                        walk(b, mult, depth + 1)
+                continue
+            if op.kind == "call":
+                callee = _attr_comp(op.line, "to_apply")
+                if callee:
+                    walk(callee, mult, depth + 1)
+                continue
+            if op.kind in _COLLECTIVES:
+                kind = op.kind.replace("-start", "")
+                out_n, out_b = _shape_numel_bytes(op.shape)
+                in_b = 0.0
+                for o in op.operands:
+                    s = comp.shapes.get(o)
+                    if s:
+                        in_b += _shape_numel_bytes(s)[1]
+                N = _group_size(op.line, n_devices)
+                if kind == "all-gather":
+                    link = out_b * (N - 1) / N
+                elif kind == "all-reduce":
+                    link = 2.0 * out_b * (N - 1) / max(N, 1)
+                elif kind in ("reduce-scatter", "all-to-all"):
+                    link = in_b * (N - 1) / max(N, 1)
+                else:  # collective-permute
+                    link = out_b
+                out.add_coll(kind, link, mult)
+                out.bytes += (out_b + in_b) * mult
+                attribute(out.link_by_op, op, link * mult)
+                attribute(out.bytes_by_op, op, (out_b + in_b) * mult)
+                continue
+            if op.kind == "dot":
+                f = _dot_flops(op, comp)
+                out.flops += f * mult
+                out.dot_flops += f * mult
+                out.bytes += op_bytes(op, comp) * mult
+                attribute(out.flops_by_op, op, f * mult)
+                attribute(out.bytes_by_op, op, op_bytes(op, comp) * mult)
+                continue
+            if op.kind == "fusion":
+                callee = _attr_comp(op.line, "calls")
+                inner = _fusion_flops(comps[callee], comps) if callee else 0.0
+                out_n, _ = _shape_numel_bytes(op.shape)
+                b = slice_aware_bytes(op, comp)
+                if b is None:
+                    b = op_bytes(op, comp)
+                out.flops += (inner + out_n) * mult
+                out.dot_flops += inner * mult
+                out.bytes += b * mult
+                attribute(out.flops_by_op, op, (inner + out_n) * mult)
+                attribute(out.bytes_by_op, op, b * mult)
+                continue
+            if op.kind in ("reduce", "reduce-window", "sort", "scatter",
+                           "gather", "dynamic-slice", "dynamic-update-slice",
+                           "custom-call", "convolution", "copy",
+                           "concatenate", "transpose", "reshape", "slice",
+                           "rng-bit-generator"):
+                out_n, _ = _shape_numel_bytes(op.shape)
+                b = slice_aware_bytes(op, comp)
+                if b is None:
+                    b = op_bytes(op, comp)
+                out.flops += out_n * mult
+                out.bytes += b * mult
+                attribute(out.bytes_by_op, op, b * mult)
+                continue
+            # elementwise / broadcast / iota / convert / select / compare:
+            # under the unfused (post-SPMD) byte model, only fusion-chain
+            # TERMINALS write to HBM (see Computation.materializes)
+            out_n, _ = _shape_numel_bytes(op.shape)
+            if fused_bytes:
+                b = op_bytes(op, comp, with_operands=True)
+            elif comp.materializes(op):
+                b = op_bytes(op, comp, with_operands=False)
+            else:
+                b = 0.0
+            out.flops += out_n * mult
+            out.bytes += b * mult
+            if b:
+                attribute(out.bytes_by_op, op, b * mult)
+
+    if entry:
+        walk(entry, 1.0)
+    return out

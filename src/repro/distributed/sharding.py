@@ -1,0 +1,238 @@
+"""Sharding rules: param-path patterns -> PartitionSpec.
+
+Axis roles (DESIGN.md §5):
+  pod    — pure data parallelism across pods (gradient all-reduce crosses
+           the inter-pod links once per step);
+  data   — batch DP within a pod + FSDP weight sharding (ZeRO-3 style
+           gather-on-use) + ZeRO-1 optimizer-state sharding;
+  model  — tensor parallelism (Megatron column/row), expert parallelism
+           (experts live on `model`), and sequence sharding of decode KV
+           (flash-decoding).
+
+Rules are matched on the '/'-joined param path, most-specific first. A rule
+gives the spec for the *logical* (unstacked) tensor; stacked block leaves
+(leading n_periods axis) get None prepended automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    # None disables tensor parallelism (small models: replicate weights and
+    # run pure DP — a 350M xlstm sharded 16-way TP spends more time
+    # resharding than computing, see EXPERIMENTS.md §Perf).
+    tp_axis: Optional[str] = "model"
+    fsdp_axis: Optional[str] = "data"  # None disables FSDP weight sharding
+    dp_axes: Tuple[str, ...] = ("data",)  # batch axes; pod prepended if present
+    shard_kv_seq: bool = True  # decode KV sequence axis over tp (flash-decoding)
+
+
+def batch_axes(mesh: Mesh, cfg: ShardingConfig) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod",) if a in mesh.axis_names) + tuple(
+        a for a in cfg.dp_axes if a in mesh.axis_names
+    )
+    return axes
+
+
+# (regex on leaf path, spec builder). `tp`/`fs` placeholders are substituted.
+# Specs are for the logical 2D/3D weight; vectors get P(tp) when they sit on
+# a tp-sharded output dim, else replicated.
+_RULES: List[Tuple[str, Tuple]] = [
+    # embeddings / heads
+    (r"(^|/)embed$", ("tp", "fs")),  # (V, d): vocab over tp, d over fsdp
+    (r"(^|/)lm_head$", ("fs", "tp")),  # (d, V)
+    (r"(^|/)(pos_embed|enc_pos_embed)$", (None, "fs")),
+    # attention
+    (r"/wq$|/wk$|/wv$|/wog$", ("fs", "tp")),
+    (r"/wo$", ("tp", "fs")),
+    (r"/bq$|/bk$|/bv$", ("tp",)),
+    # dense FFN
+    (r"/w_gate$|/w_in$", ("fs", "tp")),
+    (r"/w_out$", ("tp", "fs")),
+    # MoE: experts over tp (EP); within-expert dims over fsdp
+    (r"/router$", ("fs", None)),
+    (r"/experts_gate$|/experts_in$", ("tp", "fs", None)),
+    (r"/experts_out$", ("tp", None, "fs")),
+    # Mamba
+    (r"/in_proj$", ("fs", "tp")),
+    (r"/out_proj$", ("tp", "fs")),
+    (r"/x_proj$", ("tp", None)),
+    (r"/conv_w$", (None, "tp")),
+    (r"/conv_b$", ("tp",)),
+    (r"/dt_proj_w$", (None, "tp")),
+    (r"/dt_proj_b$", ("tp",)),
+    (r"/A_log$", ("tp", None)),
+    (r"/D$", ("tp",)),
+    # xLSTM
+    (r"/W$", ("fs", "tp")),
+    (r"/R$", ("tp", None, None)),
+    (r"/norm_scale$", (None, None)),
+    (r"/wi$|/wf$", ("fs", None)),
+    (r"/bi$|/bf$|/b$", (None,)),
+    # norms & defaults
+    (r"scale_param$|/bias$", (None,)),
+]
+
+
+def _resolve(spec_tpl: Tuple, tp: Optional[str], fs: Optional[str]):
+    out = []
+    for s in spec_tpl:
+        if s == "tp":
+            out.append(tp)
+        elif s == "fs":
+            out.append(fs)
+        else:
+            out.append(s)
+    return tuple(out)
+
+
+def spec_for_path(
+    path: str, ndim: int, stacked: bool, cfg: ShardingConfig
+) -> P:
+    """PartitionSpec for one leaf. `stacked` = has leading n_periods axis."""
+    tp, fs = cfg.tp_axis, cfg.fsdp_axis
+    logical_ndim = ndim - (1 if stacked else 0)
+    for pat, tpl in _RULES:
+        if re.search(pat, path):
+            spec = _resolve(tpl, tp, fs)
+            # pad/trim to the logical rank
+            if len(spec) < logical_ndim:
+                spec = spec + (None,) * (logical_ndim - len(spec))
+            spec = spec[:logical_ndim]
+            if stacked:
+                spec = (None,) + spec
+            return P(*spec)
+    return P(*((None,) * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def prune_pspecs(spec_tree, shape_tree, mesh: Mesh):
+    """Drop sharding on any dim the axis size does not divide — explicit
+    jit in/out shardings require exact divisibility (GSPMD only pads
+    propagated intermediates). Falls back to replication per-dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(tuple(spec)))
+        out = []
+        for dim, ax in enumerate(entries[: leaf.ndim]):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            out.append(ax if leaf.shape[dim] % total == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def param_pspecs(
+    params, cfg: ShardingConfig = ShardingConfig(), mesh: Optional[Mesh] = None
+) -> Dict:
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs).
+    Pass `mesh` to prune non-divisible axes (required at jit boundaries)."""
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        stacked = "blocks" in p  # stacked per-period leaves
+        return spec_for_path(p, leaf.ndim, stacked, cfg)
+
+    specs = jax.tree_util.tree_map_with_path(leaf_spec, params)
+    if mesh is not None:
+        specs = prune_pspecs(specs, params, mesh)
+    return specs
+
+
+def cache_pspecs(cache, mesh: Mesh, cfg: ShardingConfig = ShardingConfig()) -> Dict:
+    """Decode-cache specs: KV sequence axis over tp (flash-decoding), batch
+    over the DP axes; SSM/xLSTM states shard their channel dim over tp."""
+    bax = batch_axes(mesh, cfg)
+    b = bax if len(bax) > 1 else (bax[0] if bax else None)
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        name = p.rsplit("/", 1)[-1]
+        # leading n_periods axis everywhere
+        if name in ("k", "v"):  # (n, B, S, n_kv, hd)
+            seq = cfg.tp_axis if (cfg.shard_kv_seq and cfg.tp_axis) else None
+            return P(None, b, seq, None, None)
+        if name in ("xk", "xv"):  # (n, B, S_src, n_kv, hd)
+            return P(None, b, None, None, None)
+        if name == "conv":  # (n, B, K-1, din)
+            return P(None, b, None, cfg.tp_axis)
+        if name == "ssm":  # (n, B, din, state)
+            return P(None, b, cfg.tp_axis, None)
+        if name == "C":  # (n, B, H, dh, dh)
+            return P(None, b, cfg.tp_axis, None, None)
+        if name in ("n", "h", "c"):  # (n, B, H, dh)
+            return P(None, b, cfg.tp_axis, None)
+        if name == "m":  # (n, B, H) or (n, B, H, dh)
+            spec = (None, b, cfg.tp_axis) + (None,) * (leaf.ndim - 3)
+            return P(*spec)
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def data_pspecs(batch, mesh: Mesh, cfg: ShardingConfig = ShardingConfig()) -> Dict:
+    """Input batch: leading batch dim over (pod?, data)."""
+    bax = batch_axes(mesh, cfg)
+    b = bax if len(bax) > 1 else (bax[0] if bax else None)
+
+    def leaf_spec(path, leaf):
+        return P(*((b,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch)
+
+
+def named(mesh: Mesh, tree_specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def validate_divisibility(params_specs, shapes, mesh: Mesh) -> List[str]:
+    """List every sharded dim that does not divide its axis size. GSPMD pads
+    these transparently (correct but wasteful); callers surface the list in
+    the dry-run report so padding waste is visible, not silent."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    findings = []
+
+    def check(path, spec, leaf):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            if leaf.shape[dim] % total != 0:
+                findings.append(f"{_path_str(path)}: dim {dim} = "
+                                f"{leaf.shape[dim]} % {total} != 0 ({ax})")
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, s, l: check(p, s, l), params_specs, shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return findings

@@ -1,0 +1,79 @@
+"""Bit-serial systolic-array timing model (Stripes-style PEs, paper Fig. 2).
+
+"The Bitserial PE architecture enables N-bit multiply-accumulate (MAC)
+operations to be computed in N cycles" — so a K-deep dot product on one PE
+costs K * serial_factor cycles, and an (M x K) @ (K x N) matmul on an
+R x C weight-stationary array costs
+
+  ceil(N / C) tile columns x ceil(M / R) tile rows
+      x (K * serial_factor + fill)            compute per tile
+  + weight-load cycles per tile (K * C weights, w_bits each, amortized
+    across the M dimension when M spans multiple row-tiles).
+
+The model is deliberately analytic (utilization, fill, serialization) — the
+cycle counts are exact for a dense schedule, which is what NeuRex's MLP unit
+executes (MLPs here have no sparsity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+from repro.hwsim.config import HWConfig
+
+
+@dataclasses.dataclass
+class MatmulCycles:
+    compute_cycles: float
+    weight_load_cycles: float
+    total: float
+    macs: int
+
+
+def bit_serial_matmul_cycles(
+    m: int,
+    k: int,
+    n: int,
+    w_bits: float,
+    a_bits: float,
+    cfg: HWConfig,
+) -> MatmulCycles:
+    """Cycles for (m x k) @ (k x n) with the given operand bit widths."""
+    rows, cols = cfg.systolic_rows, cfg.systolic_cols
+    row_tiles = math.ceil(m / rows)
+    col_tiles = math.ceil(n / cols)
+    serial = cfg.serial_factor(w_bits, a_bits)
+
+    fill = rows + cols  # systolic pipeline fill/drain per tile
+    per_tile = k * serial + fill
+    compute = row_tiles * col_tiles * per_tile
+
+    # Weight-stationary: weights for a (k x cols) tile are loaded once per
+    # column tile (streamed over all row tiles). Loading is bit-serial too:
+    # k*cols weights, w_bits each, cols lanes wide.
+    weight_load = col_tiles * k * w_bits
+
+    return MatmulCycles(
+        compute_cycles=float(compute),
+        weight_load_cycles=float(weight_load),
+        total=float(compute + weight_load),
+        macs=m * k * n,
+    )
+
+
+def mlp_cycles(
+    m: int,
+    layer_dims: Sequence[Tuple[int, int]],
+    w_bits: Sequence[float],
+    a_bits: Sequence[float],
+    cfg: HWConfig,
+) -> Tuple[float, List[MatmulCycles]]:
+    """Total MLP-unit cycles for a batch of m samples through a stack of
+    linear layers with per-layer bit widths."""
+    assert len(layer_dims) == len(w_bits) == len(a_bits)
+    per_layer = [
+        bit_serial_matmul_cycles(m, d_in, d_out, wb, ab, cfg)
+        for (d_in, d_out), wb, ab in zip(layer_dims, w_bits, a_bits)
+    ]
+    return sum(c.total for c in per_layer), per_layer

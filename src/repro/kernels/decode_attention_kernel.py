@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash-decoding attention (one query token vs a long
+KV cache).
+
+Grid walks KV chunks sequentially per (batch, kv-head) block with running
+(max, sum, weighted-V) accumulators in VMEM — the single-token analogue of
+flash attention. The sequence axis can then stay HBM-resident and sharded;
+this kernel is the per-shard compute of the distributed flash-decode the
+launcher expresses with GSPMD (cache seq axis over `model`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, bs, n_s, scale):
+    """Block: q (G, hd) query heads of one kv head; k/v (bs, hd)."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (G, hd)
+    k = k_ref[0]  # (bs, hd)
+    v = v_ref[0]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bs)
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = pos < len_ref[0, 0]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)  # (G, bs)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hkv, G, hd): query heads grouped by kv head
+    k: jnp.ndarray,  # (B, Hkv, S, hd)
+    v: jnp.ndarray,  # (B, Hkv, S, hd)
+    length: jnp.ndarray,  # () int32: valid KV length (pos+1)
+    bs: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (B, Hkv, G, hd) attention output for one decode step."""
+    B, Hkv, G, hd = q.shape
+    S = k.shape[2]
+    ps = (-S) % bs
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    Sp = S + ps
+    n_s = Sp // bs
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = q.reshape(B * Hkv, G, hd)
+    kf = kp.reshape(B * Hkv, Sp, hd)
+    vf = vp.reshape(B * Hkv, Sp, hd)
+    lens = jnp.full((1, 1), length, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, bs=bs, n_s=n_s, scale=scale),
+        grid=(B * Hkv, 1, n_s),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, _, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, _, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, _, s: (b, s, 0)),
+            pl.BlockSpec((1, 1), lambda b, _, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, _, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, lens)
+    return out.reshape(B, Hkv, G, hd).astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: flash attention (prefill/training forward).
+
+The §Roofline memory term for prefill/train cells is dominated by
+materialized attention probabilities (the pure-JAX reference writes
+(chunk, S) score rows to HBM). This kernel runs the classic flash
+schedule: grid (batch*kv-head, q-blocks, kv-blocks) with running
+(max, sum, output) accumulators in VMEM — probabilities never leave
+the chip. The kv-block axis is innermost (sequential), so the carried
+accumulator pattern matches the other kernels in this package.
+
+Causal masking skips fully-masked kv blocks' contribution via the mask
+(TPU grids can't early-exit; the numerics are identical).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq, bk, n_k, causal, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (bq, G, hd)
+    k = k_ref[0]  # (bk, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, G, bk)
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # (bq, G, bk)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bq, G, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hkv, S, G, hd) query heads grouped by kv head
+    k: jnp.ndarray,  # (B, Hkv, S, hd)
+    v: jnp.ndarray,  # (B, Hkv, S, hd)
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (B, Hkv, S, G, hd) f32 attention output."""
+    B, Hkv, S, G, hd = q.shape
+    pq, pk = (-S) % bq, (-S) % bk
+    # pad queries with zeros (outputs sliced off), keys with NEG-masked pos:
+    # padded kv columns are masked by causal qpos>=kpos only when causal;
+    # for the non-causal case mask via an explicit length below.
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sq, Sk = S + pq, S + pk
+    if not causal and pk:
+        # mask padded keys by pushing them to -inf via a huge negative bias
+        # appended on the hd axis — simpler: handle via causal=False only
+        # when S % bk == 0 (wrapper enforces).
+        raise ValueError("non-causal flash requires S % bk == 0")
+    n_k = Sk // bk
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = qp.reshape(B * Hkv, Sq, G, hd)
+    kf = kp.reshape(B * Hkv, Sk, hd)
+    vf = vp.reshape(B * Hkv, Sk, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, n_k=n_k,
+                          causal=causal, scale=scale),
+        grid=(B * Hkv, Sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, G, hd), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, G, hd), lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Sq, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, G, 1), jnp.float32),
+            pltpu.VMEM((bq, G, 1), jnp.float32),
+            pltpu.VMEM((bq, G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hkv, Sq, G, hd)[:, :, :S]

@@ -1,0 +1,77 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+`use_pallas="auto"` runs the kernels on TPU backends and falls back to the
+jnp reference elsewhere; `True` forces interpret-mode Pallas (Python-level
+execution of the kernel body — the CPU validation path), `False` forces
+the reference.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.alpha_composite import alpha_composite as _alpha_pallas
+from repro.kernels.decode_attention_kernel import (
+    decode_attention as _decode_pallas,
+)
+from repro.kernels.flash_attention_kernel import (
+    flash_attention as _flash_pallas,
+)
+from repro.kernels.hash_encoding_kernel import hash_gather as _hash_pallas
+from repro.kernels.quant_matmul import quant_matmul as _qmm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas):
+    if use_pallas == "auto":
+        return _on_tpu(), not _on_tpu()
+    return bool(use_pallas), True  # explicit True => interpret off-TPU
+
+
+def quant_matmul(x_codes, w_codes, sx, sw, zx, use_pallas="auto", **kw):
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.quant_matmul_ref(x_codes, w_codes, sx, sw, zx)
+    return _qmm_pallas(
+        x_codes, w_codes, sx, sw, zx,
+        interpret=interpret and not _on_tpu(), **kw,
+    )
+
+
+def alpha_composite(sigma, rgb, delta, use_pallas="auto", **kw):
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.alpha_composite_ref(sigma, rgb, delta)
+    return _alpha_pallas(
+        sigma, rgb, delta, interpret=interpret and not _on_tpu(), **kw
+    )
+
+
+def hash_gather(indices, table, use_pallas="auto", **kw):
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.hash_gather_ref(indices, table)
+    return _hash_pallas(
+        indices, table, interpret=interpret and not _on_tpu(), **kw
+    )
+
+
+def decode_attention(q, k, v, length, use_pallas="auto", **kw):
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.decode_attention_ref(q, k, v, length)
+    return _decode_pallas(
+        q, k, v, length, interpret=interpret and not _on_tpu(), **kw
+    )
+
+
+def flash_attention(q, k, v, causal=True, use_pallas="auto", **kw):
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_pallas(
+        q, k, v, causal=causal, interpret=interpret and not _on_tpu(), **kw
+    )

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: quantized matmul with int32 accumulation.
+
+The TPU-native realization of HERO's bit-serial MLP unit (DESIGN.md §3):
+the bit-serial PE's *numerics* are exact integer MACs, which int8 codes
+with an int32 accumulator reproduce exactly for any b <= 8 (the per-unit
+bit width only changes the code range, not the arithmetic); the bit-serial
+*timing* lives in repro/hwsim. The MXU gets dense int8 tiles — serializing
+bits on a systolic array would waste it.
+
+Tiling: (bm x bk) @ (bk x bn) with an int32 VMEM accumulator scratch; K is
+the innermost (sequential) grid axis so the accumulator carries across K
+tiles — the standard Pallas matmul schedule, MXU-aligned (128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, zx_ref, o_ref, acc_ref, *, n_k):
+    """One (bm, bn) output tile, accumulated over the K grid axis.
+
+    x int8 codes (asymmetric, zero point zx), w int8 codes (symmetric):
+      out = (sum_k (x - zx) * w) * sx * sw
+          = (sum_k x*w  -  zx * sum_k w) * sx * sw
+    Both terms accumulate exactly in int32 on the MXU. Zero-padded K tiles
+    contribute 0 to both terms (padded x rows are 0 AND padded w rows are
+    0, so x*w = 0 and wsum picks up nothing).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    prod = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    wsum = jnp.sum(w, axis=0, keepdims=True)  # (1, bn)
+    acc_ref[...] += prod - zx_ref[0, 0] * wsum
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * sx_ref[0, 0] * sw_ref[0, 0]
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul(
+    x_codes: jnp.ndarray,  # (M, K) int8 activation codes
+    w_codes: jnp.ndarray,  # (K, N) int8 weight codes
+    sx: jnp.ndarray,  # scalar f32 activation scale
+    sw: jnp.ndarray,  # scalar f32 weight scale
+    zx: jnp.ndarray,  # scalar int32 activation zero point
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns f32 (M, N) = dequant((x - zx) @ w) * sx * sw."""
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2, (x_codes.shape, w_codes.shape)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x_codes, ((0, pm), (0, pk)))
+    wp = jnp.pad(w_codes, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    n_k = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k),
+        grid=(Mp // bm, Np // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(
+        xp,
+        wp,
+        jnp.asarray(sx, jnp.float32).reshape(1, 1),
+        jnp.asarray(sw, jnp.float32).reshape(1, 1),
+        jnp.asarray(zx, jnp.int32).reshape(1, 1),
+    )
+    return out[:M, :N]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quant_matmul_ref(x_codes, w_codes, sx, sw, zx) -> jnp.ndarray:
+    """Exact integer semantics: ((x - zx) @ w) * sx * sw, int32 accumulate."""
+    x = x_codes.astype(jnp.int32) - jnp.asarray(zx, jnp.int32)
+    w = w_codes.astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * jnp.asarray(sx, jnp.float32) * jnp.asarray(
+        sw, jnp.float32
+    )
+
+
+def alpha_composite_ref(sigma, rgb, delta):
+    """color (R,3), acc (R,1) via exclusive-cumprod transmittance."""
+    alpha = 1.0 - jnp.exp(-sigma * delta)  # (R, S)
+    keep = 1.0 - alpha
+    cum = jnp.cumprod(keep, axis=1)
+    T = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+    w = T * alpha
+    color = jnp.einsum("rs,rsc->rc", w, rgb)
+    acc = jnp.sum(w, axis=1, keepdims=True)
+    return color, acc
+
+
+def hash_gather_ref(indices, table):
+    return table[indices].astype(jnp.float32)
+
+
+def decode_attention_ref(q, k, v, length):
+    """q (B,Hkv,G,hd); k/v (B,Hkv,S,hd); masked softmax over S."""
+    B, Hkv, G, hd = q.shape
+    S = k.shape[2]
+    logits = jnp.einsum(
+        "bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / np.sqrt(hd)
+    mask = jnp.arange(S) < length
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q (B,Hkv,S,G,hd); k/v (B,Hkv,S,hd); full-softmax oracle."""
+    B, Hkv, S, G, hd = q.shape
+    logits = jnp.einsum(
+        "bhsgd,bhtd->bhsgt", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        logits = jnp.where(mask[None, None, :, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhsgt,bhtd->bhsgd", p, v.astype(jnp.float32))

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Roofline counting needs the post-SPMD, pre-backend-legalization HLO: the
+# CPU backend's float normalization rewrites every bf16 op to f32, which
+# would inflate all byte/collective counts 2x vs the TPU target (see
+# DESIGN.md "CPU dry-run caveats"). The dump keeps original dtypes.
+_DUMP_DIR = os.environ.get("REPRO_XLA_DUMP", "/tmp/repro_xla_dump")
+os.environ["XLA_FLAGS"] += (
+    f" --xla_dump_to={_DUMP_DIR} --xla_dump_hlo_pass_re=spmd-partitioning"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  - the sharding config is coherent (GSPMD partitions without error),
+  - the per-device memory fits (memory_analysis),
+  - and it yields the roofline inputs (cost_analysis FLOPs/bytes +
+    collective bytes parsed from the compiled HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch xlstm-350m \
+      --shape train_4k --mesh both --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    SHAPES,
+    ARCH_IDS,
+    get_arch,
+    train_input_specs,
+    prefill_input_specs,
+    decode_input_specs,
+)
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.distributed.hlo_analysis import ChipSpec, RooflineTerms
+from repro.distributed.hlo_counters import analyze as hlo_analyze
+from repro.distributed.sharding import (
+    ShardingConfig,
+    batch_axes,
+    cache_pspecs,
+    param_pspecs,
+    prune_pspecs,
+    validate_divisibility,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    opt_state_pspecs,
+    train_shardings,
+)
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, adamw_init
+
+
+# ---------------------------------------------------------------------------
+# Post-SPMD dump plumbing
+# ---------------------------------------------------------------------------
+def _clear_dump():
+    d = Path(_DUMP_DIR)
+    if d.exists():
+        for f in d.iterdir():
+            try:
+                f.unlink()
+            except OSError:
+                pass
+
+
+def _read_spmd_dump(expect_name: str = "") -> str:
+    """Newest post-SPMD dump whose module name matches the lowered step
+    (guards against stale files from other compilations)."""
+    d = Path(_DUMP_DIR)
+    cands = sorted(
+        d.glob(f"*{expect_name}*after_spmd-partitioning*"),
+        key=lambda p: p.stat().st_mtime,
+    )
+    if not cands:
+        raise FileNotFoundError(
+            f"no after_spmd-partitioning dump for {expect_name!r} in "
+            f"{_DUMP_DIR}; XLA_FLAGS dump flags did not take effect"
+        )
+    return cands[-1].read_text()
+
+
+def _model_flops(spec: ArchSpec, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params."""
+    n = active_params(spec.model)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Params touched per token: MoE counts top_k experts, not all."""
+    total = cfg.n_params()
+    if cfg.moe is None:
+        return float(total)
+    m = cfg.moe
+    dffe = m.d_ff_expert or cfg.d_ff
+    glu = cfg.ffn_type in ("swiglu", "geglu")
+    per_expert = cfg.d_model * dffe * (3 if glu else 2)
+    n_moe_layers = sum(
+        1
+        for l in range(cfg.n_layers)
+        if l % m.every_n_layers == m.every_n_layers - 1
+    )
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return float(total - inactive)
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+def _act_pspec(multi_pod: bool):
+    dp = ("pod", "data") if multi_pod else "data"
+    return (dp, "model", None)  # Megatron-SP: residuals sharded over seq
+
+
+def build_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool):
+    """Returns (jitted fn, example args as ShapeDtypeStructs, mesh, scfg)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_total = int(np.prod([s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+                            if a in ("pod", "data")]))
+    scfg = ShardingConfig(tp_axis=None) if spec.no_tp else ShardingConfig()
+    model = spec.model
+
+    if shape.kind == "train":
+        ap = _act_pspec(multi_pod)
+        if spec.no_tp:
+            ap = (ap[0], None, None)  # no seq/TP sharding for small models
+        model = dataclasses.replace(model, act_pspec=ap)
+        if model.moe is not None:
+            # per-rank capacity: one dispatch group per DP shard
+            model = dataclasses.replace(
+                model, moe=dataclasses.replace(
+                    model.moe, dispatch_groups=dp_total)
+            )
+        mb = max(spec.microbatch.get(shape.name, 32), dp_total)
+        accum = max(shape.global_batch // mb, 1)
+        micro_sds = train_input_specs(model, shape, mb)
+        batch_sds = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((accum,) + s.shape, s.dtype), micro_sds
+        )
+        params_sds = lm.param_specs(model)
+        opt_sds = jax.eval_shape(
+            functools.partial(adamw_init, moment_dtype=spec.moment_dtype),
+            params_sds,
+        )
+        gspecs = param_pspecs(params_sds, scfg, mesh)
+        step = make_train_step(model, AdamWConfig(lr=1e-4, weight_decay=0.1),
+                               moment_dtype=spec.moment_dtype,
+                               grad_pspecs=gspecs)
+        in_sh, out_sh = train_shardings(
+            params_sds, opt_sds, batch_sds, mesh, scfg, spec.moment_dtype
+        )
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+        return fn, args, mesh, scfg
+
+    named = lambda t: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
+    )
+    bax = batch_axes(mesh, scfg)
+    batch_ok = shape.global_batch % int(
+        np.prod([mesh.shape[a] for a in bax])
+    ) == 0
+    b = (bax if len(bax) > 1 else bax[0]) if (bax and batch_ok) else None
+    params_sds = lm.param_specs(model)
+    pspec = param_pspecs(params_sds, scfg, mesh)
+
+    vocab_ax = "model" if model.vocab_size % mesh.shape["model"] == 0 else None
+    if shape.kind == "prefill":
+        batch_sds = prefill_input_specs(model, shape)
+        bspec = jax.tree_util.tree_map(
+            lambda s: P(*((b,) + (None,) * (s.ndim - 1))), batch_sds
+        )
+        cache_sds = lm.cache_specs(model, shape.global_batch, shape.seq_len)
+        cspec = cache_pspecs(cache_sds, mesh, scfg)
+        if not batch_ok:
+            cspec = _drop_batch_axis(cspec)
+        cspec = prune_pspecs(cspec, cache_sds, mesh)
+        logits_spec = P(b, None, vocab_ax)
+        step = make_prefill_step(model, shape.seq_len)
+        fn = jax.jit(
+            step,
+            in_shardings=(named(pspec), named(bspec)),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec), named(cspec)),
+        )
+        return fn, (params_sds, batch_sds), mesh, scfg
+
+    # decode
+    io_sds = decode_input_specs(model, shape)
+    cache_sds = lm.cache_specs(model, shape.global_batch, shape.seq_len)
+    cspec = cache_pspecs(cache_sds, mesh, scfg)
+    if not batch_ok:
+        cspec = _drop_batch_axis(cspec)
+    cspec = prune_pspecs(cspec, cache_sds, mesh)
+    tok_spec = P(b, None)
+    logits_spec = P(b, None, vocab_ax)
+    step = make_decode_step(model)
+    fn = jax.jit(
+        step,
+        in_shardings=(
+            named(pspec), named(cspec),
+            NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()),
+        ),
+        out_shardings=(NamedSharding(mesh, logits_spec), named(cspec)),
+        donate_argnums=(1,),  # cache updated in place
+    )
+    args = (params_sds, cache_sds, io_sds["tokens"], io_sds["pos"])
+    return fn, args, mesh, scfg
+
+
+def _drop_batch_axis(spec_tree):
+    """Replace the batch axis (dim 1 after the period-stack dim) with None
+    when the global batch does not divide the DP axes (e.g. long_500k B=1)."""
+
+    def fix(s):
+        entries = list(s)
+        if len(entries) >= 2:
+            entries[1] = None
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def run_cell(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
+             out_dir: Path, chip: ChipSpec = ChipSpec()) -> dict:
+    cell = f"{spec.arch_id} x {shape.name} x {'2pod' if multi_pod else '1pod'}"
+    t0 = time.time()
+    fn, args, mesh, scfg = build_cell(spec, shape, multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    _clear_dump()
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+    except Exception as e:  # pragma: no cover - backend dependent
+        mem["error"] = str(e)
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "utilization operand 0",
+             "bytes accessed output")}
+
+    # Loop-aware counters over the post-SPMD dump: cost_analysis() visits
+    # while bodies ONCE (undercounts scanned programs by orders of
+    # magnitude) and the CPU backend f32-normalizes bf16 (2x inflation);
+    # the after_spmd-partitioning dump has per-device shapes, original
+    # dtypes, and statically known trip counts.
+    step_name = {"train": "train_step", "prefill": "prefill_step",
+                 "decode": "decode_step"}[shape.kind]
+    hlo = _read_spmd_dump(step_name)
+    counters = hlo_analyze(hlo, n_devices=n_dev, fused_bytes=False)
+    terms = RooflineTerms(
+        compute_s=counters.flops / chip.peak_flops_bf16,
+        memory_s=counters.bytes / chip.hbm_bw,
+        collective_s=counters.link_bytes / chip.ici_bw,
+        hlo_flops=counters.flops * n_dev,
+        hlo_bytes=counters.bytes * n_dev,
+        collective_bytes=counters.link_bytes,
+        model_flops=_model_flops(spec, shape),
+    )
+    coll_counts = counters.coll_counts
+    coll_bytes = counters.coll_bytes
+
+    # Per-device weight bytes (analytic) for the memory report.
+    param_bytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(args[0])
+    )
+
+    result = {
+        "cell": cell,
+        "arch": spec.arch_id,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "cost_analysis_raw_body_once": cost,
+        "memory_analysis": mem,
+        "param_bytes_global": param_bytes,
+        "param_bytes_per_device": param_bytes / n_dev,
+        "dot_flops_per_device": counters.dot_flops,
+        "collectives": {
+            "counts": coll_counts,
+            "bytes_by_kind": coll_bytes,
+            "per_device_link_bytes": counters.link_bytes,
+        },
+        "roofline": terms.as_dict(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"{spec.arch_id}__{shape.name}__{result['mesh'].replace('x','_')}.json"
+    (out_dir / fname).write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_skip = n_fail = 0
+    for aid in archs:
+        spec = get_arch(aid)
+        for sname in shapes:
+            shape = SHAPES[sname]
+            if not spec.runs(sname):
+                print(f"SKIP {aid} x {sname}: {spec.skips[sname]}")
+                n_skip += 1
+                continue
+            for mp in meshes:
+                tag = "2pod" if mp else "1pod"
+                try:
+                    r = run_cell(spec, shape, mp, out_dir)
+                    rf = r["roofline"]
+                    print(
+                        f"OK   {aid} x {sname} x {tag}: "
+                        f"compile={r['compile_s']}s "
+                        f"compute={rf['compute_s']:.3e}s "
+                        f"memory={rf['memory_s']:.3e}s "
+                        f"coll={rf['collective_s']:.3e}s "
+                        f"dom={rf['dominant']}"
+                    )
+                    n_ok += 1
+                except Exception:
+                    print(f"FAIL {aid} x {sname} x {tag}:")
+                    traceback.print_exc()
+                    n_fail += 1
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (recorded), {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""LM model zoo: the 10 assigned architectures as one composable stack.
+
+Families:
+  - dense decoder transformers (llama3, qwen2, granite, nemotron, llava
+    backbone) — GQA/MQA attention + (GLU | gelu | squared-relu) FFN;
+  - MoE decoders (qwen3-moe, arctic) — sort-based capacity-dispatch experts,
+    optional dense residual branch (arctic);
+  - hybrid (jamba) — Mamba SSM blocks with attention every 8th layer + MoE
+    every other layer;
+  - recurrent (xlstm) — alternating mLSTM (parallel form) / sLSTM blocks;
+  - encoder-decoder (whisper) — bidirectional encoder + causal decoder with
+    cross-attention; conv frontend stubbed per the assignment.
+
+Entry points:
+  init_params(cfg, key)         -> param pytree (ShapeDtypeStruct-able)
+  train_step / loss_fn          -> next-token CE training step
+  prefill_step / serve_step     -> KV-cache inference steps
+"""
+from repro.models.common import ModelConfig, MoEConfig, ACT_FNS
+from repro.models.lm import (
+    init_params,
+    param_specs,
+    loss_fn,
+    forward,
+    prefill,
+    decode_step,
+    init_cache,
+    cache_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "ACT_FNS",
+    "init_params",
+    "param_specs",
+    "loss_fn",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_specs",
+]

@@ -1,0 +1,254 @@
+"""GQA/MQA/MHA attention: chunked training path + KV-cache decode path.
+
+Training/prefill uses a q-chunk scan (memory-efficient attention): for each
+chunk of queries the full (chunk, S) score row is materialized, softmaxed,
+and contracted — peak memory O(chunk * S) instead of O(S^2). XLA:TPU fuses
+this into a flash-attention-like schedule; the Pallas kernel in
+repro/kernels/flash_attention is the explicitly tiled TPU version and is
+checked against this module.
+
+Decode reads a pre-filled KV cache laid out (B, S_max, n_kv, hd) so the
+sequence axis can be sharded over the `model` mesh axis (flash-decoding
+style: partial softmax stats combine across shards — GSPMD inserts the
+all-reduce over the sharded S axis automatically).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_param_shapes(cfg: ModelConfig, cross: bool = False) -> Dict[str, Tuple]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    shapes = {
+        "wq": (d, nh * hd),
+        "wk": (d, nkv * hd),
+        "wv": (d, nkv * hd),
+        "wo": (nh * hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes.update(
+            {"bq": (nh * hd,), "bk": (nkv * hd,), "bv": (nkv * hd,)}
+        )
+    return shapes
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig) -> Dict:
+    params = {}
+    for name, shape in attn_param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.startswith("b"):
+            params[name] = jnp.zeros(shape, cfg.param_dtype)
+        else:
+            params[name] = dense_init(sub, shape[0], shape[1], cfg.param_dtype)
+    return params
+
+
+def _project_qkv(params: Dict, x: jnp.ndarray, cfg: ModelConfig, x_kv=None):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,Skv,Hkv,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    if x_kv is None:
+        x_kv = x
+    Skv = x_kv.shape[1]
+    q = x @ params["wq"]
+    k = x_kv @ params["wk"]
+    v = x_kv @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa_chunked(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, Skv, Hkv, hd)
+    v: jnp.ndarray,  # (B, Skv, Hkv, hd)
+    causal: bool,
+    q_offset: int | jnp.ndarray = 0,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Memory-efficient attention via lax.scan over query chunks.
+
+    q_offset: absolute position of q[0] (for prefill continuation). Causal
+    mask compares absolute positions q_offset + i >= j.
+    """
+    B, S, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv  # q heads per kv head
+    scale = 1.0 / np.sqrt(hd)
+
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    # (B, S, H, hd) -> (n_chunks, B, chunk, Hkv, g, hd)
+    def reshape_q(qq, n, c):
+        qq = qq[:, : n * c].reshape(B, n, c, Hkv, g, hd)
+        return jnp.moveaxis(qq, 1, 0)
+
+    def one_chunk(q_chunk, start):
+        # q_chunk: (B, c, Hkv, g, hd); scores (B, c, Hkv, g, Skv).
+        # bf16 inputs + f32 accumulation (MXU-native); the softmax runs in
+        # f32, the AV contraction goes back through bf16 operands.
+        s = jnp.einsum(
+            "bchgd,bshd->bchgs", q_chunk, k,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if causal:
+            c = q_chunk.shape[1]
+            qpos = q_offset + start + jnp.arange(c)
+            mask = qpos[:, None] >= jnp.arange(Skv)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(k.dtype)
+        return jnp.einsum(
+            "bchgs,bshd->bchgd", p, v, preferred_element_type=jnp.float32
+        )
+
+    def scan_body(start, q_chunk):
+        out = one_chunk(q_chunk, start)
+        return start + chunk, out
+
+    qs = reshape_q(q, n_chunks, chunk)
+    _, outs = jax.lax.scan(scan_body, 0, qs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_chunks * chunk, H, hd)
+    if rem:
+        tail = one_chunk(
+            q[:, n_chunks * chunk :].reshape(B, rem, Hkv, g, hd),
+            n_chunks * chunk,
+        ).reshape(B, rem, H, hd)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out.astype(q.dtype)
+
+
+def attention(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    x_kv: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, x_kv)
+    if positions is None:
+        positions = jnp.arange(S)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if x_kv is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    out = _sdpa_chunked(q, k, v, causal=causal and x_kv is None, chunk=cfg.attn_chunk)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """One layer's KV cache: (B, S_max, n_kv, hd) x 2."""
+    dtype = dtype or cfg.param_dtype
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(
+    params: Dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: Dict,  # {"k","v"}: (B, S_max, n_kv, hd)
+    pos: jnp.ndarray,  # () int32: index of the new token
+    cfg: ModelConfig,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step against a pre-filled cache. Returns (out, new cache).
+
+    The sequence axis of the cache may be sharded (flash-decoding); the
+    masked softmax below reduces over it, and the one-hot cache update
+    avoids a gather/scatter on the sharded axis.
+    """
+    B, _, _ = x.shape
+    S_max = cache["k"].shape[1]
+    hd = cfg.head_dim
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    if use_rope:
+        p = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, p, cfg.rope_theta)
+        k_new = apply_rope(k_new, p, cfg.rope_theta)
+
+    # One-hot update keeps the (possibly sharded) S axis un-gathered.
+    onehot = (jnp.arange(S_max) == pos).astype(cache["k"].dtype)  # (S,)
+    k = cache["k"] * (1.0 - onehot)[None, :, None, None] + (
+        onehot[None, :, None, None] * k_new.astype(cache["k"].dtype)
+    )
+    v = cache["v"] * (1.0 - onehot)[None, :, None, None] + (
+        onehot[None, :, None, None] * v_new.astype(cache["v"].dtype)
+    )
+
+    Hkv, H = cfg.n_kv_heads, cfg.n_heads
+    g = H // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qh = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qh.astype(k.dtype), k,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    mask = (jnp.arange(S_max) <= pos)[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p, v, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": k, "v": v}
+
+
+def decode_cross_attention(
+    params: Dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    kv: Dict,  # precomputed {"k","v"}: (B, S_src, n_kv, hd)
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Cross-attention during decode: static encoder KV, no update."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    Hkv, H = cfg.n_kv_heads, cfg.n_heads
+    g = H // Hkv
+    qh = q.reshape(B, Hkv, g, hd).astype(kv["k"].dtype)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qh, kv["k"], preferred_element_type=jnp.float32
+    ) / np.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1).astype(kv["v"].dtype)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p, kv["v"], preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, 1, H * hd).astype(x.dtype) @ params["wo"]
+
+
+def precompute_cross_kv(params: Dict, enc_out: jnp.ndarray, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = enc_out @ params["wk"]
+    v = enc_out @ params["wv"]
+    if cfg.qkv_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return {
+        "k": k.reshape(B, S, cfg.n_kv_heads, hd),
+        "v": v.reshape(B, S, cfg.n_kv_heads, hd),
+    }

@@ -1,0 +1,206 @@
+"""Shared model building blocks + the ModelConfig that drives all 10 archs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0  # expert hidden dim (0 -> use cfg.d_ff)
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    every_n_layers: int = 1  # MoE on layers where (layer % n == n-1)
+    router_dtype: str = "float32"
+    # Token groups for EP dispatch: positions-in-expert are computed with a
+    # group-LOCAL prefix scan and capacity is per (group, expert) — set to
+    # the DP shard count in production (per-rank capacity semantics).
+    dispatch_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    # FFN
+    ffn_type: str = "swiglu"  # swiglu | geglu | gelu | relu2
+    # Attention
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    attn_chunk: int = 512  # flash-style q-chunk for long sequences
+    # Block pattern
+    pattern: str = "dense"  # dense | moe | jamba | xlstm | encdec
+    attn_every: int = 1  # jamba: attention on layers where l % attn_every == 0
+    # MoE
+    moe: Optional[MoEConfig] = None
+    # SSM (jamba mamba blocks)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    max_source_len: int = 0  # encoder positions (learned)
+    # positional scheme: "rope" | "learned" (learned needs max_pos_embed)
+    pos_embed: str = "rope"
+    max_pos_embed: int = 0
+    # Modality frontend stub: inputs arrive as precomputed embeddings.
+    embed_frontend: str = "tokens"  # tokens | stub_frames | prefix_patches
+    n_prefix_patches: int = 0  # llava: patch embeddings prepended
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # numerics / scale knobs
+    dtype: str = "bfloat16"
+    remat: bool = True
+    grad_accum: int = 1
+    # Residual-stream sharding constraint applied at block boundaries,
+    # e.g. (("pod","data"), "model", None) = Megatron-SP sequence sharding
+    # of saved activations. None = let GSPMD choose. Hashable (static arg).
+    act_pspec: Optional[Tuple] = None
+    # embedding quant bands (HERO: the hash-level analogue, DESIGN.md §4)
+    n_embed_bands: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head > 0 else self.d_model // self.n_heads
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab_size
+        hd, nh, nkv = self.head_dim, self.n_heads, self.n_kv_heads
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d
+        glu = self.ffn_type in ("swiglu", "geglu")
+        ffn_dense = d * dff * (3 if glu else 2)
+        attn = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+        for l in range(self.n_layers):
+            kind = layer_kind(self, l)
+            if kind in ("attn", "enc", "dec"):
+                total += attn
+                if kind == "dec":
+                    total += attn  # cross attention
+            elif kind == "mamba":
+                din = self.ssm_expand * d
+                total += 2 * d * din + din * d  # in/out proj
+                total += din * (self.ssm_conv + 2 * self.ssm_state + 2)
+            elif kind in ("mlstm", "slstm"):
+                total += 4 * d * (nh * hd) + (nh * hd) * d
+            if kind in ("attn", "enc", "dec", "mlstm", "slstm") or kind == "mamba":
+                pass
+            # FFN / MoE
+            if self.pattern == "xlstm":
+                continue  # no separate FFN (d_ff = 0)
+            if self.moe is not None and (l % self.moe.every_n_layers == self.moe.every_n_layers - 1):
+                dffe = self.moe.d_ff_expert or dff
+                total += self.moe.n_experts * d * dffe * (3 if glu else 2)
+                total += d * self.moe.n_experts  # router
+                if self.moe.dense_residual:
+                    total += ffn_dense
+            else:
+                total += ffn_dense
+        return total
+
+
+def layer_kind(cfg: ModelConfig, layer: int) -> str:
+    """What lives at a given depth for each pattern."""
+    if cfg.pattern == "jamba":
+        return "attn" if layer % cfg.attn_every == cfg.attn_every - 1 else "mamba"
+    if cfg.pattern == "xlstm":
+        return "mlstm" if layer % 2 == 0 else "slstm"
+    if cfg.pattern == "encdec":
+        return "enc" if layer < cfg.encoder_layers else "dec"
+    return "attn"
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+ACT_FNS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron squared-ReLU
+}
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.norm_type == "rmsnorm":
+        return rms_norm(x, params["scale_param"], cfg.norm_eps)
+    return layer_norm(x, params["scale_param"], params["bias"], cfg.norm_eps)
+
+
+def norm_init(cfg: ModelConfig, d: int) -> dict:
+    p = {"scale_param": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,). Rotates pairs (even, odd)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, d/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,211 @@
+"""FFN blocks: dense (GLU / gelu / squared-ReLU) and mixture-of-experts.
+
+MoE uses sort-free capacity dispatch (GShard-style positions via exclusive
+cumsum, scatter into an (E, C, d) buffer, batched expert matmuls, gather
+back). With experts sharded over the `model` mesh axis the scatter/gather
+lower to all-to-alls — the EP pattern. Capacity C is static per shape, so
+one compile serves a whole run. Tokens over capacity are dropped (classic
+GShard); the residual path keeps them lossless at the block level.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACT_FNS, ModelConfig, MoEConfig, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+def ffn_param_shapes(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, dff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        return {"w_gate": (d, dff), "w_in": (d, dff), "w_out": (dff, d)}
+    return {"w_in": (d, dff), "w_out": (dff, d)}
+
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    params = {}
+    for name, shape in ffn_param_shapes(cfg, d_ff).items():
+        key, sub = jax.random.split(key)
+        params[name] = dense_init(sub, shape[0], shape[1], cfg.param_dtype)
+    return params
+
+
+def ffn(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+    elif cfg.ffn_type == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_in"])
+    elif cfg.ffn_type == "gelu":
+        h = jax.nn.gelu(x @ params["w_in"])
+    elif cfg.ffn_type == "relu2":
+        h = ACT_FNS["relu2"](x @ params["w_in"])
+    else:
+        raise ValueError(cfg.ffn_type)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts
+# ---------------------------------------------------------------------------
+def moe_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    m = cfg.moe
+    d = cfg.d_model
+    dffe = m.d_ff_expert or cfg.d_ff
+    glu = cfg.ffn_type in ("swiglu", "geglu")
+    shapes = {"router": (d, m.n_experts)}
+    if glu:
+        shapes["experts_gate"] = (m.n_experts, d, dffe)
+    shapes["experts_in"] = (m.n_experts, d, dffe)
+    shapes["experts_out"] = (m.n_experts, dffe, d)
+    return shapes
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Dict:
+    params = {}
+    for name, shape in moe_param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name == "router":
+            params[name] = dense_init(sub, shape[0], shape[1], jnp.float32)
+        else:
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / math.sqrt(shape[1])
+            ).astype(cfg.param_dtype)
+    if cfg.moe.dense_residual:
+        key, sub = jax.random.split(key)
+        params["dense"] = init_ffn(sub, cfg)
+    return params
+
+
+def moe_capacity(n_tokens: int, mcfg: MoEConfig) -> int:
+    """Static per-expert capacity, rounded up to a lane-friendly multiple."""
+    c = math.ceil(n_tokens * mcfg.top_k * mcfg.capacity_factor / mcfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _constrain(t, spec_entries, cfg: ModelConfig):
+    """Sharding constraint using the axis names from cfg.act_pspec."""
+    if cfg.act_pspec is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    dp, tp = cfg.act_pspec[0], cfg.act_pspec[1]
+    names = {"dp": dp, "tp": tp, None: None}
+    return jax.lax.with_sharding_constraint(
+        t, P(*(names[e] for e in spec_entries))
+    )
+
+
+def moe_ffn(
+    params: Dict, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Returns (out, aux_loss). Dense residual added if set.
+
+    GROUPED dispatch (EP-friendly): tokens are split into G groups (G = DP
+    shard count in production) and positions-in-expert are computed with a
+    group-LOCAL cumsum; the dispatch buffer is (E, G, C/G, d) sharded
+    (experts -> `model`, groups -> `data`). This keeps the position prefix
+    scan shard-local (no cross-shard all-gather of the one-hot), and both
+    dispatch and combine are token<->expert SCATTERS, which GSPMD lowers to
+    all-to-alls — per-rank-capacity semantics, exactly like deployed EP
+    systems (capacity is enforced per group; documented drop-semantics
+    difference vs global capacity).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    G = m.dispatch_groups if T % max(m.dispatch_groups, 1) == 0 else 1
+    Tg = T // G  # tokens per group
+    Cg = moe_capacity(Tg, m)  # per-group, per-expert capacity
+
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.dtype(m.router_dtype)) @ params["router"].astype(
+        jnp.dtype(m.router_dtype)
+    )  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balancing auxiliary loss (Switch-style): E * sum(frac_i * prob_i).
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    aux_loss = E * jnp.sum(me * ce)
+
+    # Position of each (token, slot) within its expert — the GLOBAL prefix
+    # count, computed hierarchically: a group-LOCAL cumsum (each DP shard
+    # scans only its tokens) plus tiny (G, E) cross-group offsets. Exact
+    # same ordering as a flat cumsum, but the heavy scan never crosses
+    # shards (the flat version all-gathers the (T*k, E) one-hot per layer).
+    ids_g = expert_ids.reshape(G, Tg * k)  # (G, Tg*k)
+    onehot = jax.nn.one_hot(ids_g, E, dtype=jnp.int32)  # (G, Tg*k, E)
+    onehot = _constrain(onehot, ("dp", None, None), cfg)
+    pos_local = jnp.cumsum(onehot, axis=1) - onehot  # exclusive, per group
+    counts = jnp.sum(onehot, axis=1)  # (G, E)
+    group_base = jnp.cumsum(counts, axis=0) - counts  # exclusive over groups
+    pos = jnp.take_along_axis(pos_local, ids_g[..., None], axis=2)[..., 0]
+    base = jnp.take_along_axis(group_base, ids_g, axis=1)  # (G, Tg*k)
+    flat_pos = (pos + base).reshape(-1)  # global position in expert
+    flat_ids = expert_ids.reshape(-1)
+    C = moe_capacity(T, m)
+    keep = flat_pos < C
+    safe_pos = jnp.where(keep, flat_pos, 0)
+
+    # Dispatch scatter: token-sharded rows -> expert-sharded (E, C, d)
+    # buffer (GSPMD lowers this to an all-to-all).
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+    contrib = xt[tok_idx] * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    buf = buf.at[flat_ids, safe_pos].add(contrib, mode="drop")
+    # NOTE (measured, EXPERIMENTS.md §Perf hillclimb 2): sharding C over
+    # the DP axis cuts expert FLOPs 16x but GSPMD then all-gathers the
+    # scatter updates / all-reduces the gather cotangent (5.8x MORE link
+    # traffic); with C unsharded the expert matmuls are duplicated across
+    # DP shards but the collectives stay small and the step is faster.
+    # The true fix is a manual shard_map EP with explicit all_to_all.
+    buf = _constrain(buf, ("tp", None, None), cfg) if False else buf
+
+    # Slot -> (token, gate) maps, scattered alongside (int32/f32, ~d/4096
+    # of the payload): these drive the combine scatter below.
+    slot_tok = jnp.full((E, C), T, jnp.int32)  # sentinel T = empty slot
+    slot_tok = slot_tok.at[flat_ids, safe_pos].min(
+        jnp.where(keep, tok_idx, T), mode="drop")
+    slot_gate = jnp.zeros((E, C), jnp.float32)
+    slot_gate = slot_gate.at[flat_ids, safe_pos].add(
+        gate_vals.reshape(-1) * keep, mode="drop")
+
+    # Expert computation: batched matmuls over the (sharded) expert dim.
+    glu = cfg.ffn_type in ("swiglu", "geglu")
+    act = jax.nn.silu if cfg.ffn_type == "swiglu" else jax.nn.gelu
+    if glu:
+        h = act(jnp.einsum("ecd,edf->ecf", buf, params["experts_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, params["experts_in"])
+    elif cfg.ffn_type == "relu2":
+        h = ACT_FNS["relu2"](jnp.einsum("ecd,edf->ecf", buf,
+                                        params["experts_in"]))
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", buf, params["experts_in"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["experts_out"])
+
+    # Combine as the MIRROR-IMAGE scatter (expert-sharded slots -> token-
+    # sharded output) instead of a gather: GSPMD turns the gather into a
+    # full all-reduce of the 10 GB dispatch buffer per layer; the scatter
+    # lowers to the symmetric all-to-all (measured in EXPERIMENTS.md §Perf).
+    weighted = out_buf * slot_gate[..., None].astype(out_buf.dtype)
+    out = jnp.zeros((T + 1, d), out_buf.dtype)  # row T absorbs empty slots
+    out = out.at[slot_tok.reshape(-1)].add(
+        weighted.reshape(E * C, d), mode="drop")
+    out = _constrain(out[:T], ("dp", None), cfg)
+
+    if m.dense_residual:
+        out = out + ffn(params["dense"], xt, cfg)
+    return out.reshape(B, S, d), aux_loss

@@ -1,0 +1,744 @@
+"""The 10-arch LM stack: init / forward / loss / prefill / decode.
+
+Layer stacking
+--------------
+Layers repeat with a static *period* p (dense: 1; jamba: 8 = lcm(attn every
+8, MoE every 2); xlstm: 2; whisper: two period-1 stacks). Parameters are
+stored as {"pos0": tree, ..., "pos{p-1}": tree} with a leading n_periods
+axis on every leaf, and the forward pass is a `lax.scan` over periods that
+unrolls the p positions inside the body. This keeps HLO size O(period), not
+O(n_layers) — a 126-layer llama3-405b compiles as one scanned block.
+
+Quantization (HERO applied to LMs, DESIGN.md §4)
+------------------------------------------------
+`LMQuantSpec` carries traced bit arrays: per-embedding-band bits (the
+hash-level analogue) and per-layer (w, a) bits over 4 projection groups
+(mixer-in / mixer-out / ffn-in / ffn-out). Bits ride through the scan as
+xs, so one compile serves every policy the agent proposes. Bits >= 16 are
+the full-precision sentinel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm_blocks as xl
+from repro.models.common import (
+    ModelConfig,
+    apply_norm,
+    dense_init,
+    layer_kind,
+    norm_init,
+)
+from repro.quant.linear_quant import activation_qparams, weight_qparams
+from repro.quant.qat import ste_fake_quant
+
+N_GROUPS = 4  # quant groups per layer: mixer_in, mixer_out, ffn_in, ffn_out
+
+# Param-name -> quant group (None = keep full precision: routers, gates,
+# SSM dynamics, norms, biases — the sensitivity exceptions in DESIGN.md §4).
+_WEIGHT_GROUP = {
+    "wq": 0, "wk": 0, "wv": 0, "wo": 1,
+    "w_gate": 2, "w_in": 2, "w_out": 3,
+    "experts_gate": 2, "experts_in": 2, "experts_out": 3,
+    "in_proj": 0, "out_proj": 1,
+    "wog": 0, "W": 0, "R": 2,
+}
+
+
+# ---------------------------------------------------------------------------
+# Quant spec
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LMQuantSpec:
+    embed_bits: jnp.ndarray  # (n_bands,) f32
+    w_bits: jnp.ndarray  # (n_layers, N_GROUPS) f32
+    a_bits: jnp.ndarray  # (n_layers, N_GROUPS) f32
+    paper_exact: bool = True
+
+
+jax.tree_util.register_dataclass(
+    LMQuantSpec,
+    data_fields=["embed_bits", "w_bits", "a_bits"],
+    meta_fields=["paper_exact"],
+)
+
+
+def no_lm_quant(cfg: ModelConfig) -> LMQuantSpec:
+    n = total_layers(cfg)
+    return LMQuantSpec(
+        embed_bits=jnp.full((cfg.n_embed_bands,), 32.0),
+        w_bits=jnp.full((n, N_GROUPS), 32.0),
+        a_bits=jnp.full((n, N_GROUPS), 32.0),
+    )
+
+
+def embed_band_boundaries(vocab: int, n_bands: int) -> List[int]:
+    """Geometric row-bands: hot (low-id, Zipf-frequent) tokens get small
+    bands — the LM analogue of coarse->fine hash levels."""
+    bounds = [0]
+    for i in range(1, n_bands):
+        b = int(round(vocab ** (i / n_bands)))
+        bounds.append(max(b, bounds[-1] + 1))
+    bounds.append(vocab)
+    return bounds
+
+
+def _maybe_quant_w(w, bits, paper_exact=True):
+    lo, hi = jnp.min(w), jnp.max(w)
+    qp = weight_qparams(lo, hi, bits, paper_exact=paper_exact)
+    q = ste_fake_quant(w, qp, symmetric=True)
+    return jnp.where(bits >= 16.0, w, q).astype(w.dtype)
+
+
+def _maybe_quant_a(x, bits):
+    lo, hi = jnp.min(x), jnp.max(x)  # dynamic per-tensor range
+    qp = activation_qparams(lo, hi, bits)
+    q = ste_fake_quant(x, qp, symmetric=False)
+    return jnp.where(bits >= 16.0, x, q).astype(x.dtype)
+
+
+def _quant_block_weights(bp: Dict, w_bits: jnp.ndarray, paper_exact: bool) -> Dict:
+    """Fake-quantize one block's weights by group. w_bits: (N_GROUPS,)."""
+
+    def walk(tree):
+        out = {}
+        for name, v in tree.items():
+            if isinstance(v, dict):
+                out[name] = walk(v)
+            elif name in _WEIGHT_GROUP and v.ndim >= 2:
+                out[name] = _maybe_quant_w(v, w_bits[_WEIGHT_GROUP[name]], paper_exact)
+            else:
+                out[name] = v
+        return out
+
+    return walk(bp)
+
+
+def quant_embedding(
+    table: jnp.ndarray, band_bits: jnp.ndarray, paper_exact: bool = True
+) -> jnp.ndarray:
+    bounds = embed_band_boundaries(table.shape[0], band_bits.shape[0])
+    parts = []
+    for i in range(len(bounds) - 1):
+        parts.append(
+            _maybe_quant_w(table[bounds[i] : bounds[i + 1]], band_bits[i], paper_exact)
+        )
+    return jnp.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+def period(cfg: ModelConfig) -> int:
+    if cfg.pattern == "jamba":
+        p = cfg.attn_every
+        if cfg.moe is not None:
+            p = math.lcm(p, cfg.moe.every_n_layers)
+        return p
+    if cfg.pattern == "xlstm":
+        return 2
+    if cfg.moe is not None and cfg.moe.every_n_layers > 1:
+        return cfg.moe.every_n_layers
+    return 1
+
+
+def total_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers + cfg.encoder_layers
+
+
+def _block_kinds(cfg: ModelConfig) -> List[str]:
+    """Mixer kind for each position within one decoder period."""
+    if cfg.pattern == "encdec":
+        return ["dec"] * period(cfg)
+    return [layer_kind(cfg, p) for p in range(period(cfg))]
+
+
+def _has_moe(cfg: ModelConfig, pos_in_period: int) -> bool:
+    if cfg.moe is None or cfg.pattern == "xlstm":
+        return False
+    e = cfg.moe.every_n_layers
+    return pos_in_period % e == e - 1
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+def _init_block(key: jax.Array, cfg: ModelConfig, kind: str, has_moe: bool) -> Dict:
+    keys = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict = {"ln1": norm_init(cfg, d)}
+    if kind in ("attn", "enc", "dec"):
+        p["attn"] = attn_mod.init_attn(keys[0], cfg)
+        if kind == "dec":
+            p["ln_x"] = norm_init(cfg, d)
+            p["xattn"] = attn_mod.init_attn(keys[3], cfg)
+    elif kind == "mamba":
+        p["ssm"] = ssm_mod.init_ssm(keys[0], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = xl.init_mlstm(keys[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = xl.init_slstm(keys[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.pattern != "xlstm" and cfg.d_ff > 0 or has_moe:
+        p["ln2"] = norm_init(cfg, d)
+        if has_moe:
+            p["moe"] = ffn_mod.init_moe(keys[1], cfg)
+        else:
+            p["ffn"] = ffn_mod.init_ffn(keys[1], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    params: Dict = {
+        "embed": dense_init(keys[0], V, d, cfg.param_dtype, scale=1.0),
+        "final_norm": norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], d, V, cfg.param_dtype)
+    if cfg.pos_embed == "learned":
+        params["pos_embed"] = dense_init(
+            keys[2], cfg.max_pos_embed, d, cfg.param_dtype, scale=0.02
+        )
+
+    p = period(cfg)
+    n_periods = cfg.n_layers // p
+    assert n_periods * p == cfg.n_layers, (cfg.n_layers, p)
+    kinds = _block_kinds(cfg)
+
+    def init_period(pkey):
+        sub = jax.random.split(pkey, p)
+        return {
+            f"pos{i}": _init_block(sub[i], cfg, kinds[i], _has_moe(cfg, i))
+            for i in range(p)
+        }
+
+    params["blocks"] = jax.vmap(init_period)(jax.random.split(keys[3], n_periods))
+
+    if cfg.pattern == "encdec":
+        def init_enc(pkey):
+            return {"pos0": _init_block(pkey, cfg, "enc", False)}
+
+        params["enc_blocks"] = jax.vmap(init_enc)(
+            jax.random.split(keys[4], cfg.encoder_layers)
+        )
+        params["enc_pos_embed"] = dense_init(
+            keys[5], cfg.max_source_len, d, cfg.param_dtype, scale=0.02
+        )
+        params["enc_final_norm"] = norm_init(cfg, d)
+    return params
+
+
+def param_specs(cfg: ModelConfig, key=None) -> Dict:
+    """ShapeDtypeStruct pytree — no device allocation (dry-run input)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+def _gather_seq(h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Megatron-SP: residuals live sequence-sharded (cfg.act_pspec); the
+    mixer/FFN input is explicitly all-gathered over the seq axis HERE so the
+    projections stay column/row-parallel. Without this constraint GSPMD
+    prefers to keep the seq axis sharded and gathers the (much larger)
+    weights instead — a 32x collective regression measured at 405B scale."""
+    if cfg.act_pspec is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    dp = cfg.act_pspec[0]
+    return jax.lax.with_sharding_constraint(h, P(dp, None, None))
+
+
+def _cot_gather_seq(h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Identity on primals; constrains the COTANGENT to be seq-gathered.
+
+    The backward of the residual-boundary constraint seq-shards dy, and
+    GSPMD then partitions every weight dot against a seq-sharded cotangent
+    by fully gathering the WEIGHTS (3.5 GB/layer at 405B) instead of
+    re-gathering dy (134 MB). Planting this at the mixer/FFN outputs makes
+    the backward all-gather of dy explicit — the standard Megatron-SP
+    backward — so weight dots stay column/row-parallel in both passes."""
+    if cfg.act_pspec is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    dp = cfg.act_pspec[0]
+    spec = P(dp, None, None)
+
+    @jax.custom_vjp
+    def f(t):
+        return t
+
+    def fwd(t):
+        return t, None
+
+    def bwd(_, g):
+        return (jax.lax.with_sharding_constraint(g, spec),)
+
+    f.defvjp(fwd, bwd)
+    return f(h)
+
+
+def _apply_block(
+    bp: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: str,
+    has_moe: bool,
+    a_bits: Optional[jnp.ndarray],
+    enc_out: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    # Gather BEFORE the norm: the norm's f32 internals would otherwise give
+    # GSPMD an f32 tensor to seq-gather (2x the bytes of the bf16 input).
+    h = apply_norm(bp["ln1"], _gather_seq(x, cfg), cfg)
+    if a_bits is not None:
+        h = _maybe_quant_a(h, a_bits[0])
+    use_rope = cfg.pos_embed == "rope"
+    if kind in ("attn", "dec"):
+        h = attn_mod.attention(
+            bp["attn"], h, cfg, positions=positions, causal=True, use_rope=use_rope
+        )
+    elif kind == "enc":
+        h = attn_mod.attention(
+            bp["attn"], h, cfg, positions=positions, causal=False, use_rope=use_rope
+        )
+    elif kind == "mamba":
+        h = ssm_mod.ssm_forward(bp["ssm"], h, cfg)
+    elif kind == "mlstm":
+        h = xl.mlstm_forward(bp["mlstm"], h, cfg)
+    elif kind == "slstm":
+        h = xl.slstm_forward(bp["slstm"], h, cfg)
+    x = x + _cot_gather_seq(h, cfg)
+    if kind == "dec":
+        h = apply_norm(bp["ln_x"], x, cfg)
+        h = attn_mod.attention(
+            bp["xattn"], h, cfg, causal=False, x_kv=enc_out, use_rope=False
+        )
+        x = x + _cot_gather_seq(h, cfg)
+    if "ln2" in bp:
+        h = apply_norm(bp["ln2"], _gather_seq(x, cfg), cfg)
+        if a_bits is not None:
+            h = _maybe_quant_a(h, a_bits[2])
+        if has_moe:
+            h, a = ffn_mod.moe_ffn(bp["moe"], h, cfg)
+            aux = aux + a
+        else:
+            h = ffn_mod.ffn(bp["ffn"], h, cfg)
+        x = x + _cot_gather_seq(h, cfg)
+    return x, aux
+
+
+def _grad_constrained(leaf_spec_tree):
+    """Identity on primals; constrains COTANGENTS to the given sharding.
+
+    Constraining the gradient accumulator outside the layer scan does not
+    propagate into the while body, so GSPMD materializes each layer's dW
+    replicated (a full all-reduce per layer per microbatch — the dominant
+    collective at 405B scale). This custom_vjp plants the constraint at the
+    point inside the backward loop body where the cotangent is produced,
+    turning the all-reduce into a reduce-scatter onto the (fsdp, tp)-sharded
+    layout. Measured 20x collective reduction (EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec as P
+
+    @jax.custom_vjp
+    def f(tree):
+        return tree
+
+    def fwd(tree):
+        return tree, None
+
+    def bwd(_, g):
+        g = jax.tree_util.tree_map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s)
+            if hasattr(t, "ndim") and t.ndim == len(tuple(s))
+            else t,
+            g, leaf_spec_tree, is_leaf=lambda x: isinstance(x, P),
+        )
+        return (g,)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _block_grad_specs(bp: Dict, cfg: ModelConfig):
+    """Sharding specs for one block's (unstacked) param slice, from the
+    same rule table the launcher uses for the params themselves. The TP
+    axis is read off act_pspec[1] (None under the no-TP small-model
+    policy)."""
+    from repro.distributed.sharding import ShardingConfig, spec_for_path, _path_str
+
+    tp = cfg.act_pspec[1] if cfg.act_pspec else "model"
+    scfg = ShardingConfig(tp_axis=tp)
+
+    def leaf_spec(path, leaf):
+        return spec_for_path(_path_str(path), leaf.ndim, False, scfg)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, bp)
+
+
+def _scan_blocks(
+    blocks: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    kinds: List[str],
+    spec: Optional[LMQuantSpec],
+    w_bits: Optional[jnp.ndarray],  # (n_periods, p, N_GROUPS)
+    a_bits: Optional[jnp.ndarray],
+    enc_out: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    p = len(kinds)
+    moe_flags = [_has_moe(cfg, i) for i in range(p)]
+
+    def constrain(x):
+        if cfg.act_pspec is not None:
+            from jax.sharding import PartitionSpec as P
+
+            x = jax.lax.with_sharding_constraint(x, P(*cfg.act_pspec))
+        return x
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, wb, ab = xs
+        if cfg.act_pspec is not None:  # training: plant dW sharding in bwd
+            bp = _grad_constrained(_block_grad_specs(bp, cfg))(bp)
+        x = constrain(x)
+        for i in range(p):
+            block = bp[f"pos{i}"]
+            abits = None
+            if spec is not None:
+                block = _quant_block_weights(block, wb[i], spec.paper_exact)
+                abits = ab[i]
+            x, a = _apply_block(
+                block, x, cfg, kinds[i], moe_flags[i], abits, enc_out, positions
+            )
+            aux = aux + a
+        x = constrain(x)
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    n_periods = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+    if w_bits is None:
+        w_bits = jnp.full((n_periods, p, N_GROUPS), 32.0)
+        a_bits = jnp.full((n_periods, p, N_GROUPS), 32.0)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (blocks, w_bits, a_bits)
+    )
+    return x, aux
+
+
+def _embed_tokens(params, tokens, cfg, spec: Optional[LMQuantSpec]):
+    table = params["embed"]
+    if spec is not None:
+        table = quant_embedding(table, spec.embed_bits, spec.paper_exact)
+    return table[tokens]
+
+
+def encode_source(
+    params, frames: jnp.ndarray, cfg: ModelConfig,
+    spec: Optional[LMQuantSpec] = None,
+) -> jnp.ndarray:
+    """Whisper encoder over stubbed frame embeddings (B, S_src, d)."""
+    S = frames.shape[1]
+    x = frames + params["enc_pos_embed"][:S]
+    w_bits = a_bits = None
+    if spec is not None:
+        w_bits = spec.w_bits[: cfg.encoder_layers].reshape(-1, 1, N_GROUPS)
+        a_bits = spec.a_bits[: cfg.encoder_layers].reshape(-1, 1, N_GROUPS)
+    x, _ = _scan_blocks(
+        params["enc_blocks"], x, cfg, ["enc"], spec, w_bits, a_bits
+    )
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def forward(
+    params: Dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    spec: Optional[LMQuantSpec] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (logits (B, S, V), aux_loss). batch keys:
+    tokens (B, S_text); patches (B, P, d) [llava]; frames (B, S_src, d)
+    [whisper]."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg, spec)
+    if cfg.embed_frontend == "prefix_patches":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][:S]
+
+    enc_out = None
+    if cfg.pattern == "encdec":
+        enc_out = encode_source(params, batch["frames"], cfg, spec)
+
+    w_bits = a_bits = None
+    if spec is not None:
+        p = period(cfg)
+        w_bits = spec.w_bits[cfg.encoder_layers :].reshape(-1, p, N_GROUPS)
+        a_bits = spec.a_bits[cfg.encoder_layers :].reshape(-1, p, N_GROUPS)
+
+    x, aux = _scan_blocks(
+        params["blocks"], x, cfg, _block_kinds(cfg), spec, w_bits, a_bits,
+        enc_out, positions,
+    )
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux
+
+
+def loss_fn(
+    params: Dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    spec: Optional[LMQuantSpec] = None,
+    aux_weight: float = 0.01,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross entropy. labels = tokens shifted inside, or explicit
+    batch["labels"]. For llava, patch positions carry no loss."""
+    logits, aux = forward(params, batch, cfg, spec)
+    tokens = batch["tokens"]
+    if cfg.embed_frontend == "prefix_patches":
+        logits = logits[:, batch["patches"].shape[1] :]
+    if "labels" in batch:
+        labels = batch["labels"]
+        valid = (labels >= 0)
+        labels = jnp.maximum(labels, 0)
+        lg = logits
+    else:
+        labels = tokens[:, 1:]
+        lg = logits[:, :-1]
+        valid = jnp.ones_like(labels, jnp.bool_)
+    lg = lg.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    metrics = {"ce": loss, "aux": aux}
+    return loss + aux_weight * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    if kind in ("attn", "dec"):
+        c = attn_mod.init_kv_cache(cfg, batch, max_seq)
+        if kind == "dec":
+            hd = cfg.head_dim
+            c["xk"] = jnp.zeros(
+                (batch, cfg.max_source_len, cfg.n_kv_heads, hd), cfg.param_dtype
+            )
+            c["xv"] = jnp.zeros_like(c["xk"])
+        return c
+    if kind == "mamba":
+        return ssm_mod.init_ssm_cache(cfg, batch)
+    if kind == "mlstm":
+        return xl.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xl.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    """Decode cache mirroring the stacked block layout."""
+    p = period(cfg)
+    n_periods = cfg.n_layers // p
+    kinds = _block_kinds(cfg)
+    one = {
+        f"pos{i}": _init_block_cache(cfg, kinds[i], batch, max_seq)
+        for i in range(p)
+    }
+    # Stack the per-layer cache over periods (init values are constant per
+    # leaf, so a broadcast is exact and XLA materializes it as a fill).
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (n_periods,) + l.shape), one
+    )
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def _decode_block(
+    bp: Dict, cache: Dict, x: jnp.ndarray, pos, cfg: ModelConfig, kind: str,
+    has_moe: bool,
+) -> Tuple[jnp.ndarray, Dict]:
+    h = apply_norm(bp["ln1"], x, cfg)
+    if kind in ("attn", "dec"):
+        h, kv = attn_mod.decode_attention(
+            bp["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos, cfg,
+            use_rope=cfg.pos_embed == "rope",
+        )
+        new_cache = dict(cache)
+        new_cache.update(kv)
+    elif kind == "mamba":
+        h, new_cache = ssm_mod.ssm_decode_step(bp["ssm"], h, cache, cfg)
+    elif kind == "mlstm":
+        h, new_cache = xl.mlstm_decode_step(bp["mlstm"], h, cache, cfg)
+    elif kind == "slstm":
+        h, new_cache = xl.slstm_decode_step(bp["slstm"], h, cache, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + h
+    if kind == "dec":
+        h = apply_norm(bp["ln_x"], x, cfg)
+        h = attn_mod.decode_cross_attention(
+            bp["xattn"], h, {"k": cache["xk"], "v": cache["xv"]}, cfg
+        )
+        x = x + h
+    if "ln2" in bp:
+        h = apply_norm(bp["ln2"], x, cfg)
+        if has_moe:
+            h, _ = ffn_mod.moe_ffn(bp["moe"], h, cfg)
+        else:
+            h = ffn_mod.ffn(bp["ffn"], h, cfg)
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(
+    params: Dict,
+    cache: Dict,
+    tokens: jnp.ndarray,  # (B, 1)
+    pos: jnp.ndarray,  # () int32 position being written
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One token for every sequence in the batch. Returns (logits, cache)."""
+    x = params["embed"][tokens]
+    if cfg.pos_embed == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)
+
+    p = period(cfg)
+    kinds = _block_kinds(cfg)
+    moe_flags = [_has_moe(cfg, i) for i in range(p)]
+
+    def body(x, xs):
+        bp, bc = xs
+        new_c = {}
+        for i in range(p):
+            x, nc = _decode_block(
+                bp[f"pos{i}"], bc[f"pos{i}"], x, pos, cfg, kinds[i], moe_flags[i]
+            )
+            new_c[f"pos{i}"] = nc
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+def prefill(
+    params: Dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    max_seq: int,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Consume a prompt, produce (logits, decode cache at pos=S).
+
+    Runs the full forward while extracting per-layer decode state; KV is
+    zero-padded out to max_seq."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg, None)
+    if cfg.embed_frontend == "prefix_patches":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"][:S]
+
+    enc_out = None
+    if cfg.pattern == "encdec":
+        enc_out = encode_source(params, batch["frames"], cfg)
+
+    p = period(cfg)
+    kinds = _block_kinds(cfg)
+    moe_flags = [_has_moe(cfg, i) for i in range(p)]
+    use_rope = cfg.pos_embed == "rope"
+
+    def block_state(bp, x, kind):
+        """(block output, decode cache) for a full-sequence input."""
+        h = apply_norm(bp["ln1"], x, cfg)
+        cache = None
+        if kind in ("attn", "dec"):
+            q, k, v = attn_mod._project_qkv(bp["attn"], h, cfg)
+            if use_rope:
+                q = apply_rope_local(q, positions, cfg)
+                k = apply_rope_local(k, positions, cfg)
+            o = attn_mod._sdpa_chunked(q, k, v, causal=True, chunk=cfg.attn_chunk)
+            h = o.reshape(B, S, -1) @ bp["attn"]["wo"]
+            pad = max_seq - S
+            cache = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+        elif kind == "mamba":
+            h, cache = ssm_mod.ssm_forward(bp["ssm"], h, cfg, return_state=True)
+        elif kind == "mlstm":
+            st = xl.mlstm_final_state(bp["mlstm"], h, cfg)
+            h = xl.mlstm_forward(bp["mlstm"], h, cfg)
+            cache = st
+        elif kind == "slstm":
+            st = xl.slstm_final_state(bp["slstm"], h, cfg)
+            h = xl.slstm_forward(bp["slstm"], h, cfg)
+            cache = st
+        x = x + h
+        if kind == "dec":
+            h = apply_norm(bp["ln_x"], x, cfg)
+            h = attn_mod.attention(
+                bp["xattn"], h, cfg, causal=False, x_kv=enc_out, use_rope=False
+            )
+            x = x + h
+            xkv = attn_mod.precompute_cross_kv(bp["xattn"], enc_out, cfg)
+            pad = cfg.max_source_len - xkv["k"].shape[1]
+            cache["xk"] = jnp.pad(xkv["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["xv"] = jnp.pad(xkv["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, cache
+
+    def body(x, bp):
+        caches = {}
+        for i in range(p):
+            kind = kinds[i]
+            xb = x
+            x, cache = block_state(bp[f"pos{i}"], x, kind)
+            if "ln2" in bp[f"pos{i}"]:
+                h = apply_norm(bp[f"pos{i}"]["ln2"], x, cfg)
+                if moe_flags[i]:
+                    h, _ = ffn_mod.moe_ffn(bp[f"pos{i}"]["moe"], h, cfg)
+                else:
+                    h = ffn_mod.ffn(bp[f"pos{i}"]["ffn"], h, cfg)
+                x = x + h
+            caches[f"pos{i}"] = cache
+        return x, caches
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, cache
+
+
+def apply_rope_local(x, positions, cfg):
+    from repro.models.common import apply_rope
+
+    return apply_rope(x, positions, cfg.rope_theta)

@@ -1,0 +1,214 @@
+"""Mamba selective-state-space block (Jamba's SSM mixer) — TPU-adapted.
+
+The CUDA reference fuses the selective scan in a single kernel with
+recomputation. On TPU we chunk the sequence: an outer `lax.scan` carries the
+(B, d_inner, d_state) state across chunks while each chunk runs a parallel
+`associative_scan` over its Q positions. The (B, Q, d_inner, d_state)
+intermediate exists for one chunk at a time (remat'd in training), which is
+the VMEM-friendly layout; Q is the tile knob.
+
+Decode is the plain recurrence on (conv_state, ssm_state) — O(1) per token,
+the reason long_500k is runnable for the hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.ssm_state
+
+
+def ssm_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    d = cfg.d_model
+    din, r, n = ssm_dims(cfg)
+    return {
+        "in_proj": (d, 2 * din),  # -> (x, z)
+        "conv_w": (cfg.ssm_conv, din),  # depthwise causal conv
+        "conv_b": (din,),
+        "x_proj": (din, r + 2 * n),  # -> (dt, B, C)
+        "dt_proj_w": (r, din),
+        "dt_proj_b": (din,),
+        "A_log": (din, n),
+        "D": (din,),
+        "out_proj": (din, d),
+    }
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    din, r, n = ssm_dims(cfg)
+    keys = jax.random.split(key, 6)
+    dt = jnp.exp(
+        jax.random.uniform(keys[4], (din,), jnp.float32)
+        * (np.log(0.1) - np.log(0.001))
+        + np.log(0.001)
+    )
+    dt = jnp.clip(dt, 1e-4, None)
+    # Inverse softplus so softplus(dt_proj_b) == dt at init.
+    dt_b = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * din, cfg.param_dtype),
+        "conv_w": (jax.random.normal(keys[1], (cfg.ssm_conv, din), jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((din,), cfg.param_dtype),
+        "x_proj": dense_init(keys[2], din, r + 2 * n, cfg.param_dtype),
+        "dt_proj_w": dense_init(keys[3], r, din, jnp.float32, scale=r**-0.5),
+        "dt_proj_b": dt_b.astype(jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))
+        ),
+        "D": jnp.ones((din,), jnp.float32),
+    } | {"out_proj": dense_init(keys[5], din, d, cfg.param_dtype)}
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over S. x: (B, S, din); w: (K, din)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is 4: unrolled shifts beat a conv op on TPU
+        out = out + pad[:, i : i + x.shape[1], :] * w[K - 1 - i]
+    return out + b
+
+
+def _selective_scan_chunked(
+    delta: jnp.ndarray,  # (B, S, din) f32
+    A: jnp.ndarray,  # (din, n) f32
+    Bc: jnp.ndarray,  # (B, S, n)
+    Cc: jnp.ndarray,  # (B, S, n)
+    xs: jnp.ndarray,  # (B, S, din)
+    h0: jnp.ndarray,  # (B, din, n) f32
+    chunk: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """y_t = C_t . h_t with h_t = exp(delta_t A) h_{t-1} + delta_t B_t x_t.
+
+    The (B, chunk, din, n) state tensor exists for ONE chunk at a time: the
+    outer lax.scan carries only the (B, din, n) boundary state, and deltaA /
+    deltaBx / y are all formed inside the chunk body. Peak memory is
+    O(B * chunk * din * n) regardless of S. Returns (y (B,S,din) f32, h_N).
+    """
+    B, S, din = delta.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def split(t):  # (B, S, ...) -> (nc, B, chunk, ...)
+        return t.reshape((B, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    def combine(a, b):
+        # (A1, X1) then (A2, X2): h = A2*(A1*h + X1) + X2
+        return a[0] * b[0], b[0] * a[1] + b[1]
+
+    def chunk_body(h, inp):
+        d, bc, cc, x = inp  # (B, chunk, din), (B, chunk, n), ..., (B, chunk, din)
+        cA = jnp.exp(d[..., None] * A)  # (B, chunk, din, n)
+        cBx = d[..., None] * bc[:, :, None, :].astype(jnp.float32) * x[
+            ..., None
+        ].astype(jnp.float32)
+        accA, accX = jax.lax.associative_scan(combine, (cA, cBx), axis=1)
+        hs = accA * h[:, None] + accX  # (B, chunk, din, n)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    hN, ys = jax.lax.scan(
+        chunk_body, h0, (split(delta), split(Bc), split(Cc), split(xs))
+    )
+    return ys.swapaxes(0, 1).reshape(B, S, din), hN
+
+
+def ssm_forward(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    """Training/prefill pass. x: (B, S, d) -> (B, S, d).
+
+    return_state=True additionally returns the decode cache at position S
+    (conv window of raw post-in_proj inputs + final SSM state)."""
+    B, S, d = x.shape
+    din, r, n = ssm_dims(cfg)
+    xz = x @ params["in_proj"]
+    xs_raw, z = xz[..., :din], xz[..., din:]
+    xs = jax.nn.silu(_causal_conv(xs_raw, params["conv_w"], params["conv_b"]))
+
+    dbc = xs @ params["x_proj"]
+    dt_in, Bc, Cc = dbc[..., :r], dbc[..., r : r + n], dbc[..., r + n :]
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ params["dt_proj_w"] + params["dt_proj_b"]
+    )  # (B, S, din) f32
+    A = -jnp.exp(params["A_log"])  # (din, n)
+    if S % chunk != 0:
+        chunk = S  # small/smoke sequences: single chunk
+    y, hN = _selective_scan_chunked(
+        delta, A, Bc, Cc, xs, jnp.zeros((B, din, n)), chunk
+    )
+    y = y + params["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv
+        window = jnp.pad(xs_raw, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1) :, :]
+        return out, {"conv": window.astype(cfg.param_dtype), "ssm": hN}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
+    din, _, n = ssm_dims(cfg)
+    dtype = dtype or cfg.param_dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din), dtype),
+        "ssm": jnp.zeros((batch, din, n), jnp.float32),
+    }
+
+
+def ssm_decode_step(
+    params: Dict, x: jnp.ndarray, cache: Dict, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, d). O(1) recurrent update."""
+    B = x.shape[0]
+    din, r, n = ssm_dims(cfg)
+    xz = x[:, 0] @ params["in_proj"]
+    xs, z = xz[..., :din], xz[..., din:]
+
+    # Conv over the rolling window [cache, x]. window[K-1] is the CURRENT
+    # token; _causal_conv puts conv_w[0] on the current token (w[j] pairs
+    # with x[t-j]), so the kernel is applied time-reversed here.
+    window = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # (B,K,din)
+    conv = jnp.einsum(
+        "bkd,kd->bd", window, params["conv_w"][::-1]
+    ) + params["conv_b"]
+    xs = jax.nn.silu(conv)
+    new_conv = window[:, 1:]
+
+    dbc = xs @ params["x_proj"]
+    dt_in, Bc, Cc = dbc[..., :r], dbc[..., r : r + n], dbc[..., r + n :]
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ params["dt_proj_w"] + params["dt_proj_b"]
+    )  # (B, din)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(delta[..., None] * A)  # (B, din, n)
+    dBx = delta[..., None] * Bc[:, None, :].astype(jnp.float32) * xs[
+        ..., None
+    ].astype(jnp.float32)
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = y + params["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,297 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel chunked form) and sLSTM
+(scalar memory, strictly sequential recurrence).
+
+mLSTM training uses the stabilized parallel form — a decay-masked
+attention-like contraction computed in q-chunks (same memory shape as
+repro.models.attention). sLSTM has a true recurrent dependency (its gates
+see h_{t-1}), so training runs a lax.scan over time; its state is O(d) per
+layer which is what makes xlstm-350m a long_500k-capable arch.
+
+Decode for both is an O(1) recurrent update on a small carried state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, dense_init
+
+NEG_INF = -1e30
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    d = cfg.d_model
+    H, dh = _heads(cfg)
+    return {
+        "wq": (d, H * dh),
+        "wk": (d, H * dh),
+        "wv": (d, H * dh),
+        "wi": (d, H),  # input gate (exp), scalar per head
+        "wf": (d, H),  # forget gate (sigmoid), scalar per head
+        "wog": (d, H * dh),  # output gate (elementwise sigmoid)
+        "out_proj": (H * dh, d),
+        "norm_scale": (H, dh),  # per-head RMS norm on h
+    }
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Dict:
+    params = {}
+    for name, shape in mlstm_param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name == "norm_scale":
+            params[name] = jnp.ones(shape, cfg.param_dtype)
+        elif name in ("wi", "wf"):
+            params[name] = dense_init(sub, shape[0], shape[1], jnp.float32)
+        else:
+            params[name] = dense_init(sub, shape[0], shape[1], cfg.param_dtype)
+    # Bias the forget gate towards remembering (standard LSTM trick).
+    params["bf"] = jnp.full((cfg.n_heads,), 3.0, jnp.float32)
+    params["bi"] = jnp.zeros((cfg.n_heads,), jnp.float32)
+    return params
+
+
+def _headwise_rms(h: jnp.ndarray, scale: jnp.ndarray, eps=1e-6) -> jnp.ndarray:
+    # h: (..., H, dh)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(var + eps) * scale
+
+
+def mlstm_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Stabilized parallel mLSTM. x: (B, S, d)."""
+    B, S, d = x.shape
+    H, dh = _heads(cfg)
+    q = (x @ params["wq"]).reshape(B, S, H, dh)
+    k = (x @ params["wk"]).reshape(B, S, H, dh)
+    v = (x @ params["wv"]).reshape(B, S, H, dh)
+    og = jax.nn.sigmoid((x @ params["wog"]).reshape(B, S, H, dh))
+
+    xf = x.astype(jnp.float32)
+    log_i = (xf @ params["wi"] + params["bi"]).astype(jnp.float32)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(xf @ params["wf"] + params["bf"])  # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)  # (B, S, H) cumulative log-forget
+
+    scale = 1.0 / np.sqrt(dh)
+    chunk = min(cfg.attn_chunk, S)
+    n_chunks = max(S // chunk, 1)
+    rem = S - n_chunks * chunk
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    src = F[:, :, None, :] * 0.0  # placeholder to keep shapes obvious
+    # log decay weight of source s seen from target t: F_t - F_s + log_i_s
+    base = log_i - F  # (B, S, H): -F_s + log i_s
+
+    def one_chunk(q_chunk, start):
+        # q_chunk: (B, c, H, dh); D: (B, c, H, S)
+        c = q_chunk.shape[1]
+        tpos = start + jnp.arange(c)
+        Ft = jax.lax.dynamic_slice_in_dim(F, start, c, axis=1)  # (B, c, H)
+        D = Ft[:, :, :, None] + base[:, None, :, :].swapaxes(2, 3)  # (B,c,H,S)
+        mask = tpos[:, None] >= jnp.arange(S)[None, :]
+        D = jnp.where(mask[None, :, None, :], D, NEG_INF)
+        m = jnp.max(D, axis=-1, keepdims=True)  # (B, c, H, 1)
+        w = jnp.exp(D - m)
+        s = jnp.einsum("bchd,bshd->bchs", q_chunk.astype(jnp.float32), kf)
+        s = s * scale * w
+        norm = jnp.maximum(jnp.abs(jnp.sum(s, axis=-1)), jnp.exp(-m[..., 0]))
+        out = jnp.einsum("bchs,bshd->bchd", s, vf) / norm[..., None]
+        return out
+
+    def scan_body(start, q_chunk):
+        return start + chunk, one_chunk(q_chunk, start)
+
+    qs = jnp.moveaxis(
+        q[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, H, dh), 1, 0
+    )
+    _, outs = jax.lax.scan(scan_body, 0, qs)
+    h = jnp.moveaxis(outs, 0, 1).reshape(B, n_chunks * chunk, H, dh)
+    if rem:
+        tail = one_chunk(q[:, n_chunks * chunk :], n_chunks * chunk)
+        h = jnp.concatenate([h, tail], axis=1)
+
+    h = _headwise_rms(h, params["norm_scale"].astype(jnp.float32))
+    h = (h.astype(x.dtype) * og).reshape(B, S, H * dh)
+    return h @ params["out_proj"]
+
+
+def mlstm_final_state(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Dict:
+    """Decode cache after consuming x (for prefill): one weighted pass.
+
+    C_S = sum_s exp(F_S - F_s + log i_s - m) k_s v_s^T  (and n, m likewise).
+    """
+    B, S, d = x.shape
+    H, dh = _heads(cfg)
+    k = (x @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    v = (x @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    log_i = xf @ params["wi"] + params["bi"]  # (B, S, H)
+    log_f = jax.nn.log_sigmoid(xf @ params["wf"] + params["bf"])
+    F = jnp.cumsum(log_f, axis=1)
+    logw = F[:, -1:, :] - F + log_i  # (B, S, H)
+    m = jnp.max(logw, axis=1)  # (B, H)
+    w = jnp.exp(logw - m[:, None, :])
+    C = jnp.einsum("bsh,bshd,bshk->bhdk", w, k, v)
+    n = jnp.einsum("bsh,bshd->bhd", w, k)
+    return {"C": C, "n": n, "m": m}
+
+
+def slstm_final_state(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Dict:
+    """Decode cache after consuming x: run the recurrence, keep final state."""
+    B, S, d = x.shape
+    H, dh = _heads(cfg)
+    wx = (x.astype(jnp.float32) @ params["W"].astype(jnp.float32)) + params["b"]
+    wx = wx.reshape(B, S, 4, H, dh).swapaxes(0, 1)
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    def body(state, wx_t):
+        return _slstm_cell(params, wx_t, state, cfg), None
+
+    (c, n, h, m), _ = jax.lax.scan(body, state0, wx)
+    return {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    H, dh = _heads(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(
+    params: Dict, x: jnp.ndarray, cache: Dict, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, d). Recurrent mLSTM update."""
+    B = x.shape[0]
+    H, dh = _heads(cfg)
+    xt = x[:, 0]
+    q = (xt @ params["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xt @ params["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (xt @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    og = jax.nn.sigmoid((xt @ params["wog"]).reshape(B, H, dh))
+
+    xf = xt.astype(jnp.float32)
+    log_i = xf @ params["wi"] + params["bi"]  # (B, H)
+    log_f = jax.nn.log_sigmoid(xf @ params["wf"] + params["bf"])
+
+    m_new = jnp.maximum(log_f + cache["m"], log_i)
+    f_sc = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+
+    k_sc = k / np.sqrt(dh)
+    C = cache["C"] * f_sc[..., None] + i_sc[..., None] * (
+        k_sc[..., :, None] * v[..., None, :]
+    )  # (B, H, dh, dh)
+    n = cache["n"] * f_sc + i_sc * k_sc
+    num = jnp.einsum("bhdk,bhd->bhk", C, q)  # read with q over key dim
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new)
+    )
+    h = num / den[..., None]
+    h = _headwise_rms(h, params["norm_scale"].astype(jnp.float32))
+    h = (h.astype(x.dtype) * og).reshape(B, 1, H * dh)
+    return h @ params["out_proj"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    d = cfg.d_model
+    H, dh = _heads(cfg)
+    return {
+        "W": (d, 4 * H * dh),  # input weights for (z, i, f, o)
+        "R": (H, dh, 4 * dh),  # block-diagonal recurrent weights per head
+        "b": (4 * H * dh,),
+        "norm_scale": (H, dh),
+        "out_proj": (H * dh, d),
+    }
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, dh = _heads(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b = np.zeros((4, H, dh), np.float32)
+    b[2] = 3.0  # forget-gate bias
+    return {
+        "W": dense_init(k1, d, 4 * H * dh, cfg.param_dtype),
+        "R": (jax.random.normal(k2, (H, dh, 4 * dh), jnp.float32) / np.sqrt(dh)
+              ).astype(cfg.param_dtype),
+        "b": jnp.asarray(b.reshape(-1)),
+        "norm_scale": jnp.ones((H, dh), cfg.param_dtype),
+        "out_proj": dense_init(k3, H * dh, d, cfg.param_dtype),
+    }
+
+
+def _slstm_cell(params, wx_t, state, cfg):
+    """One recurrence step. wx_t: (B, 4, H, dh) precomputed W @ x_t + b."""
+    H, dh = _heads(cfg)
+    c, n, h, m = state  # each (B, H, dh)
+    rh = jnp.einsum("bhd,hdk->bhk", h, params["R"].astype(jnp.float32))
+    rh = rh.reshape(h.shape[0], H, 4, dh).swapaxes(1, 2)  # (B, 4, H, dh)
+    pre = wx_t + rh
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * z
+    n_new = f_sc * n + i_sc
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return c_new, n_new, h_new, m_new
+
+
+def slstm_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d); sequential scan over S."""
+    B, S, d = x.shape
+    H, dh = _heads(cfg)
+    wx = (x.astype(jnp.float32) @ params["W"].astype(jnp.float32)) + params["b"]
+    wx = wx.reshape(B, S, 4, H, dh).swapaxes(0, 1)  # (S, B, 4, H, dh)
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    def body(state, wx_t):
+        new = _slstm_cell(params, wx_t, state, cfg)
+        return new, new[2]
+
+    _, hs = jax.lax.scan(body, state0, wx)
+    hs = hs.swapaxes(0, 1)  # (B, S, H, dh)
+    hs = _headwise_rms(hs, params["norm_scale"].astype(jnp.float32))
+    return hs.astype(x.dtype).reshape(B, S, H * dh) @ params["out_proj"]
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    H, dh = _heads(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+def slstm_decode_step(
+    params: Dict, x: jnp.ndarray, cache: Dict, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    B = x.shape[0]
+    H, dh = _heads(cfg)
+    wx = (x[:, 0].astype(jnp.float32) @ params["W"].astype(jnp.float32)) + params["b"]
+    wx = wx.reshape(B, 4, H, dh)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_cell(params, wx, state, cfg)
+    out = _headwise_rms(h, params["norm_scale"].astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, 1, H * dh) @ params["out_proj"]
+    return out, {"c": c, "n": n, "h": h, "m": m}

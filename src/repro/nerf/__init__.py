@@ -1,0 +1,46 @@
+"""Instant-NGP in JAX: multi-resolution hash encoding + tiny MLPs + volume
+rendering, with first-class mixed-precision quantization hooks (the paper's
+quantizable modules: every hash-table level and every MLP layer's weights and
+input activations).
+"""
+from repro.nerf.hash_encoding import HashEncodingConfig, init_hash_tables, hash_encode
+from repro.nerf.ngp import (
+    NGPConfig,
+    NGPQuantSpec,
+    init_ngp,
+    ngp_apply,
+    ngp_linear_names,
+    make_quant_units,
+    no_quant_spec,
+    spec_from_policy,
+)
+from repro.nerf.render import render_rays, RenderConfig
+from repro.nerf.scenes import SceneConfig, make_scene, render_ground_truth
+from repro.nerf.dataset import NGPDataset, make_dataset
+from repro.nerf.train import train_ngp, psnr, TrainConfig, evaluate_psnr, finetune_ngp
+
+__all__ = [
+    "HashEncodingConfig",
+    "init_hash_tables",
+    "hash_encode",
+    "NGPConfig",
+    "NGPQuantSpec",
+    "init_ngp",
+    "ngp_apply",
+    "ngp_linear_names",
+    "make_quant_units",
+    "no_quant_spec",
+    "spec_from_policy",
+    "render_rays",
+    "RenderConfig",
+    "SceneConfig",
+    "make_scene",
+    "render_ground_truth",
+    "NGPDataset",
+    "make_dataset",
+    "train_ngp",
+    "finetune_ngp",
+    "psnr",
+    "TrainConfig",
+    "evaluate_psnr",
+]

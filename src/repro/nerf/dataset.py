@@ -1,0 +1,78 @@
+"""Dataset: posed ground-truth images + ray batch iterator for NGP training."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nerf.scenes import (
+    SceneConfig,
+    camera_poses,
+    camera_rays,
+    make_scene,
+    render_ground_truth,
+)
+
+
+@dataclasses.dataclass
+class NGPDataset:
+    scene_name: str
+    cfg: SceneConfig
+    # Flattened over all train views:
+    train_rays_o: np.ndarray  # (N, 3)
+    train_rays_d: np.ndarray  # (N, 3)
+    train_rgb: np.ndarray  # (N, 3)
+    # Per test view:
+    test_rays_o: np.ndarray  # (V, hw*hw, 3)
+    test_rays_d: np.ndarray  # (V, hw*hw, 3)
+    test_rgb: np.ndarray  # (V, hw*hw, 3)
+
+    def ray_batches(
+        self, batch_size: int, seed: int = 0
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Infinite shuffled ray batches (deterministic given seed)."""
+        rng = np.random.RandomState(seed)
+        n = self.train_rays_o.shape[0]
+        while True:
+            idx = rng.randint(0, n, size=batch_size)
+            yield self.train_rays_o[idx], self.train_rays_d[idx], self.train_rgb[idx]
+
+
+def make_dataset(cfg: SceneConfig) -> NGPDataset:
+    scene = make_scene(cfg.name)
+    focal = cfg.focal_mult * cfg.image_hw
+    train_poses, test_poses = camera_poses(cfg)
+
+    render = jax.jit(
+        lambda o, d: render_ground_truth(scene, o, d, cfg)
+    )
+
+    tr_o, tr_d, tr_c = [], [], []
+    for pose in train_poses:
+        o, d = camera_rays(jnp.asarray(pose), cfg.image_hw, focal)
+        c = render(o, d)
+        tr_o.append(np.asarray(o))
+        tr_d.append(np.asarray(d))
+        tr_c.append(np.asarray(c))
+
+    te_o, te_d, te_c = [], [], []
+    for pose in test_poses:
+        o, d = camera_rays(jnp.asarray(pose), cfg.image_hw, focal)
+        c = render(o, d)
+        te_o.append(np.asarray(o))
+        te_d.append(np.asarray(d))
+        te_c.append(np.asarray(c))
+
+    return NGPDataset(
+        scene_name=cfg.name,
+        cfg=cfg,
+        train_rays_o=np.concatenate(tr_o),
+        train_rays_d=np.concatenate(tr_d),
+        train_rgb=np.concatenate(tr_c),
+        test_rays_o=np.stack(te_o),
+        test_rays_d=np.stack(te_d),
+        test_rgb=np.stack(te_c),
+    )

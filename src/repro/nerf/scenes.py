@@ -1,0 +1,219 @@
+"""Procedural ground-truth scenes (Synthetic-NeRF stand-ins, see DESIGN.md §6).
+
+Three SDF scenes named after their Synthetic-NeRF counterparts — `chair`,
+`lego` (a stacked-brick tower), `ficus` (blobby plant in a pot) — rendered
+analytically by sphere tracing with Lambertian + ambient shading on a white
+background. Scenes live in [-0.5, 0.5]^3. Cameras are look-at poses on a
+ring; intrinsics are a simple pinhole.
+
+Everything is jnp and jit-friendly; ground-truth rendering happens once at
+dataset build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SceneFn = Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+# point (..., 3) -> (sdf (...,), rgb (..., 3))
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneConfig:
+    name: str = "chair"
+    image_hw: int = 64
+    n_train_views: int = 12
+    n_test_views: int = 3
+    cam_radius: float = 1.3
+    cam_elevation: float = 0.45  # radians above the equator
+    focal_mult: float = 1.2  # focal = focal_mult * image_hw
+    light_dir: Tuple[float, float, float] = (0.5, -1.0, 0.6)
+    ambient: float = 0.35
+
+
+# ---------------------------------------------------------------------------
+# SDF primitives
+# ---------------------------------------------------------------------------
+def _sd_box(p, center, half):
+    q = jnp.abs(p - jnp.asarray(center)) - jnp.asarray(half)
+    outside = jnp.linalg.norm(jnp.maximum(q, 0.0), axis=-1)
+    inside = jnp.minimum(jnp.max(q, axis=-1), 0.0)
+    return outside + inside
+
+
+def _sd_sphere(p, center, r):
+    return jnp.linalg.norm(p - jnp.asarray(center), axis=-1) - r
+
+
+def _sd_cylinder_y(p, center, r, half_h):
+    d = p - jnp.asarray(center)
+    dxz = jnp.sqrt(d[..., 0] ** 2 + d[..., 2] ** 2) - r
+    dy = jnp.abs(d[..., 1]) - half_h
+    outside = jnp.sqrt(jnp.maximum(dxz, 0.0) ** 2 + jnp.maximum(dy, 0.0) ** 2)
+    inside = jnp.minimum(jnp.maximum(dxz, dy), 0.0)
+    return outside + inside
+
+
+def _union(parts):
+    """parts: list of (sdf (...,), rgb (3,)). Min-union with winner's color."""
+    sdfs = jnp.stack([s for s, _ in parts], axis=-1)  # (..., K)
+    cols = jnp.stack([jnp.broadcast_to(jnp.asarray(c), s.shape + (3,)) for s, c in parts], axis=-2)
+    k = jnp.argmin(sdfs, axis=-1)
+    sdf = jnp.min(sdfs, axis=-1)
+    rgb = jnp.take_along_axis(cols, k[..., None, None].repeat(3, -1), axis=-2)[..., 0, :]
+    return sdf, rgb
+
+
+# ---------------------------------------------------------------------------
+# Scenes
+# ---------------------------------------------------------------------------
+def _chair(p):
+    seat = (_sd_box(p, (0.0, -0.05, 0.0), (0.18, 0.02, 0.18)), (0.72, 0.45, 0.20))
+    back = (_sd_box(p, (0.0, 0.12, -0.16), (0.18, 0.16, 0.02)), (0.76, 0.50, 0.24))
+    legs = []
+    for sx in (-0.14, 0.14):
+        for sz in (-0.14, 0.14):
+            legs.append(
+                (_sd_box(p, (sx, -0.20, sz), (0.02, 0.13, 0.02)), (0.45, 0.28, 0.12))
+            )
+    return _union([seat, back] + legs)
+
+
+def _lego(p):
+    bricks = []
+    cols = [(0.85, 0.15, 0.12), (0.95, 0.75, 0.10), (0.15, 0.45, 0.80), (0.20, 0.65, 0.25)]
+    for i, c in enumerate(cols):
+        y = -0.28 + 0.14 * i
+        half = 0.20 - 0.035 * i
+        bricks.append((_sd_box(p, (0.0, y, 0.0), (half, 0.06, half * 0.7)), c))
+        # studs
+        bricks.append(
+            (_sd_cylinder_y(p, (half * 0.5, y + 0.08, 0.0), 0.03, 0.02), c)
+        )
+        bricks.append(
+            (_sd_cylinder_y(p, (-half * 0.5, y + 0.08, 0.0), 0.03, 0.02), c)
+        )
+    return _union(bricks)
+
+
+def _ficus(p):
+    pot = (_sd_cylinder_y(p, (0.0, -0.33, 0.0), 0.12, 0.08), (0.55, 0.27, 0.15))
+    trunk = (_sd_cylinder_y(p, (0.0, -0.10, 0.0), 0.025, 0.18), (0.42, 0.30, 0.16))
+    rng = np.random.RandomState(7)
+    blobs = []
+    for _ in range(9):
+        c = rng.uniform(-0.16, 0.16, size=3)
+        c[1] = rng.uniform(0.05, 0.30)
+        r = rng.uniform(0.05, 0.10)
+        g = rng.uniform(0.35, 0.65)
+        blobs.append((_sd_sphere(p, tuple(c), float(r)), (0.10, float(g), 0.12)))
+    return _union([pot, trunk] + blobs)
+
+
+_SCENES = {"chair": _chair, "lego": _lego, "ficus": _ficus}
+
+
+def make_scene(name: str) -> SceneFn:
+    if name not in _SCENES:
+        raise KeyError(f"unknown scene {name!r}; have {sorted(_SCENES)}")
+    return _SCENES[name]
+
+
+# ---------------------------------------------------------------------------
+# Cameras
+# ---------------------------------------------------------------------------
+def camera_poses(cfg: SceneConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Ring of look-at cameras. Returns (train (Nt,3,4), test (Ne,3,4))
+    camera-to-world matrices [R|t]."""
+
+    def pose(theta):
+        eye = np.array(
+            [
+                cfg.cam_radius * np.cos(theta) * np.cos(cfg.cam_elevation),
+                cfg.cam_radius * np.sin(cfg.cam_elevation),
+                cfg.cam_radius * np.sin(theta) * np.cos(cfg.cam_elevation),
+            ]
+        )
+        fwd = -eye / np.linalg.norm(eye)  # look at origin
+        up = np.array([0.0, 1.0, 0.0])
+        right = np.cross(fwd, up)
+        right /= np.linalg.norm(right)
+        up2 = np.cross(right, fwd)
+        c2w = np.stack([right, up2, -fwd], axis=1)  # columns
+        return np.concatenate([c2w, eye[:, None]], axis=1)  # (3,4)
+
+    train = np.stack(
+        [pose(t) for t in np.linspace(0, 2 * np.pi, cfg.n_train_views, endpoint=False)]
+    )
+    test = np.stack(
+        [
+            pose(t + 0.13)
+            for t in np.linspace(0, 2 * np.pi, cfg.n_test_views, endpoint=False)
+        ]
+    )
+    return train.astype(np.float32), test.astype(np.float32)
+
+
+def camera_rays(c2w: jnp.ndarray, hw: int, focal: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pinhole rays for one pose. Returns (origins (hw*hw,3), dirs (hw*hw,3))."""
+    i, j = jnp.meshgrid(jnp.arange(hw), jnp.arange(hw), indexing="xy")
+    x = (i - hw / 2 + 0.5) / focal
+    y = -(j - hw / 2 + 0.5) / focal
+    d_cam = jnp.stack([x, y, -jnp.ones_like(x)], axis=-1).reshape(-1, 3)
+    d_world = d_cam @ c2w[:, :3].T
+    d_world = d_world / jnp.linalg.norm(d_world, axis=-1, keepdims=True)
+    o_world = jnp.broadcast_to(c2w[:, 3], d_world.shape)
+    return o_world, d_world
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth rendering (sphere tracing)
+# ---------------------------------------------------------------------------
+def render_ground_truth(
+    scene: SceneFn,
+    rays_o: jnp.ndarray,
+    rays_d: jnp.ndarray,
+    cfg: SceneConfig,
+    n_steps: int = 48,
+    eps: float = 2e-3,
+) -> jnp.ndarray:
+    """Sphere-trace each ray; Lambertian shade on hit; white background."""
+
+    def sdf_only(p):
+        return scene(p)[0]
+
+    def step(carry, _):
+        t, hit = carry
+        p = rays_o + rays_d * t[:, None]
+        d, _ = scene(p)
+        hit = hit | (d < eps)
+        t = t + jnp.where(hit, 0.0, jnp.maximum(d, 1e-3))
+        return (t, hit), None
+
+    t0 = jnp.full((rays_o.shape[0],), 0.05)
+    hit0 = jnp.zeros((rays_o.shape[0],), bool)
+    (t, hit), _ = jax.lax.scan(step, (t0, hit0), None, length=n_steps)
+
+    p = rays_o + rays_d * t[:, None]
+    _, albedo = scene(p)
+
+    # Normal via central differences.
+    h = 1e-3
+    grads = []
+    for axis in range(3):
+        e = jnp.zeros((3,)).at[axis].set(h)
+        grads.append(sdf_only(p + e) - sdf_only(p - e))
+    n = jnp.stack(grads, axis=-1)
+    n = n / (jnp.linalg.norm(n, axis=-1, keepdims=True) + 1e-9)
+
+    light = jnp.asarray(cfg.light_dir)
+    light = light / jnp.linalg.norm(light)
+    diffuse = jnp.clip(jnp.sum(n * (-light)[None], axis=-1), 0.0, 1.0)
+    shade = cfg.ambient + (1.0 - cfg.ambient) * diffuse
+    color = albedo * shade[:, None]
+    white = jnp.ones_like(color)
+    return jnp.where(hit[:, None], color, white)

@@ -1,0 +1,201 @@
+"""NGP training / finetuning / PSNR evaluation.
+
+`train_ngp` fits a fresh model (full precision). `finetune_ngp` is the
+retraining step of the HERO episode (Sec. III-E): short QAT through the
+fake-quantized forward with the episode's bit assignment. Both are built on
+a single jit'd step whose quantization spec is *traced*, so one compile
+serves every policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nerf.dataset import NGPDataset
+from repro.nerf.ngp import NGPConfig, NGPQuantSpec, init_ngp, ngp_apply, no_quant_spec
+from repro.nerf.render import RenderConfig, render_rays
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 400
+    batch_rays: int = 512
+    lr: float = 5e-3
+    finetune_lr: float = 1e-3
+    weight_decay: float = 1e-6
+    grad_clip: float = 10.0
+    seed: int = 0
+    eval_ray_chunk: int = 4096
+
+
+def psnr(mse: float) -> float:
+    return float(-10.0 * np.log10(max(mse, 1e-12)))
+
+
+def _loss_fn(params, rays_o, rays_d, target, cfg, rcfg, spec, key):
+    color, _ = render_rays(params, rays_o, rays_d, cfg, rcfg, spec, key)
+    return jnp.mean((color - target) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rcfg", "opt_cfg"))
+def _train_step(params, opt_state, rays_o, rays_d, target, key, spec, cfg, rcfg, opt_cfg):
+    loss, grads = jax.value_and_grad(_loss_fn)(
+        params, rays_o, rays_d, target, cfg, rcfg, spec, key
+    )
+    grads, _ = clip_by_global_norm(grads, 10.0)
+    params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+    return params, opt_state, loss
+
+
+def _run_steps(
+    params,
+    dataset: NGPDataset,
+    cfg: NGPConfig,
+    rcfg: RenderConfig,
+    tcfg: TrainConfig,
+    spec: NGPQuantSpec,
+    steps: int,
+    lr: float,
+    seed: int,
+):
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=tcfg.weight_decay)
+    opt_state = adamw_init(params)
+    key = jax.random.PRNGKey(seed)
+    batches = dataset.ray_batches(tcfg.batch_rays, seed=seed)
+    loss = None
+    for _ in range(steps):
+        ro, rd, c = next(batches)
+        key, sub = jax.random.split(key)
+        params, opt_state, loss = _train_step(
+            params,
+            opt_state,
+            jnp.asarray(ro),
+            jnp.asarray(rd),
+            jnp.asarray(c),
+            sub,
+            spec,
+            cfg,
+            rcfg,
+            opt_cfg,
+        )
+    return params, float(loss) if loss is not None else float("nan")
+
+
+def train_ngp(
+    dataset: NGPDataset,
+    cfg: NGPConfig,
+    rcfg: RenderConfig,
+    tcfg: TrainConfig,
+) -> Tuple[Dict, float]:
+    """Train a fresh full-precision NGP. Returns (params, final_loss)."""
+    params = init_ngp(jax.random.PRNGKey(tcfg.seed), cfg)
+    spec = no_quant_spec(cfg)
+    return _run_steps(
+        params, dataset, cfg, rcfg, tcfg, spec, tcfg.steps, tcfg.lr, tcfg.seed
+    )
+
+
+def finetune_ngp(
+    params: Dict,
+    dataset: NGPDataset,
+    cfg: NGPConfig,
+    rcfg: RenderConfig,
+    tcfg: TrainConfig,
+    spec: NGPQuantSpec,
+    steps: int,
+) -> Tuple[Dict, float]:
+    """QAT finetune under a quantization spec (the episode retraining)."""
+    return _run_steps(
+        params,
+        dataset,
+        cfg,
+        rcfg,
+        tcfg,
+        spec,
+        steps,
+        tcfg.finetune_lr,
+        tcfg.seed + 1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rcfg"))
+def _render_chunk(params, rays_o, rays_d, spec, cfg, rcfg):
+    # Deterministic (non-stratified) sampling for evaluation.
+    eval_rcfg = dataclasses.replace(rcfg, stratified=False)
+    color, _ = render_rays(params, rays_o, rays_d, cfg, eval_rcfg, spec, None)
+    return color
+
+
+def evaluate_psnr(
+    params: Dict,
+    dataset: NGPDataset,
+    cfg: NGPConfig,
+    rcfg: RenderConfig,
+    spec: Optional[NGPQuantSpec] = None,
+    chunk: int = 4096,
+) -> float:
+    """Mean PSNR over held-out test views."""
+    if spec is None:
+        spec = no_quant_spec(cfg)
+    total_se, total_px = 0.0, 0
+    for v in range(dataset.test_rays_o.shape[0]):
+        ro = dataset.test_rays_o[v]
+        rd = dataset.test_rays_d[v]
+        gt = dataset.test_rgb[v]
+        preds = []
+        for s in range(0, ro.shape[0], chunk):
+            preds.append(
+                np.asarray(
+                    _render_chunk(
+                        params,
+                        jnp.asarray(ro[s : s + chunk]),
+                        jnp.asarray(rd[s : s + chunk]),
+                        spec,
+                        cfg,
+                        rcfg,
+                    )
+                )
+            )
+        pred = np.concatenate(preds)
+        total_se += float(((pred - gt) ** 2).sum())
+        total_px += gt.size
+    return psnr(total_se / total_px)
+
+
+def render_test_view(
+    params: Dict,
+    dataset: NGPDataset,
+    cfg: NGPConfig,
+    rcfg: RenderConfig,
+    view: int = 0,
+    spec: Optional[NGPQuantSpec] = None,
+    chunk: int = 4096,
+) -> np.ndarray:
+    """Render one held-out view to an (hw, hw, 3) image (for Fig. 5-style
+    qualitative comparisons)."""
+    if spec is None:
+        spec = no_quant_spec(cfg)
+    ro = dataset.test_rays_o[view]
+    rd = dataset.test_rays_d[view]
+    preds = []
+    for s in range(0, ro.shape[0], chunk):
+        preds.append(
+            np.asarray(
+                _render_chunk(
+                    params,
+                    jnp.asarray(ro[s : s + chunk]),
+                    jnp.asarray(rd[s : s + chunk]),
+                    spec,
+                    cfg,
+                    rcfg,
+                )
+            )
+        )
+    hw = dataset.cfg.image_hw
+    return np.concatenate(preds).reshape(hw, hw, 3)

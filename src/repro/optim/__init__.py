@@ -1,0 +1,27 @@
+"""Optimizer substrate (no external deps beyond jax).
+
+Provides AdamW with decoupled weight decay, global-norm gradient clipping,
+and standard LR schedules. State is a pytree mirroring the params pytree, so
+it shards the same way params do (ZeRO-1 = shard both over the data axis).
+"""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    exponential_decay,
+)
+from repro.optim.clipping import global_norm, clip_by_global_norm
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "AdamWConfig",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "exponential_decay",
+    "global_norm",
+    "clip_by_global_norm",
+]

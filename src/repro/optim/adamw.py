@@ -1,0 +1,114 @@
+"""AdamW in pure JAX, pytree-structured state.
+
+The moment pytrees mirror the param pytree exactly, so any sharding applied to
+params can be applied verbatim to optimizer state (this is what lets the
+launcher implement ZeRO-1 by just re-sharding the state pytree over the data
+axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # Parameters whose path contains one of these substrings get no decay
+    # (biases, norms, embeddings by convention).
+    no_decay_substrings: tuple = ("bias", "norm", "scale_param")
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: Any  # first moment, same pytree as params
+    nu: Any  # second moment, same pytree as params
+
+
+def adamw_init(params: Any, moment_dtype: str = "param") -> AdamWState:
+    """moment_dtype: 'param' (match param dtype), 'f32', 'bf16', or 'int8'
+    (blockwise 8-bit Adam, see optim/state_codec.py)."""
+    if moment_dtype == "param":
+        zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+    from repro.optim.state_codec import moment_codecs
+
+    mu_c, nu_c = moment_codecs(moment_dtype)
+    mu = jax.tree_util.tree_map(mu_c.init, params)
+    nu = jax.tree_util.tree_map(nu_c.init, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    config: AdamWConfig,
+    lr_schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    moment_dtype: str = "param",
+):
+    """One AdamW step. Returns (new_params, new_state). moment_dtype must
+    match what adamw_init was called with ('int8' round-trips the moments
+    through the blockwise codec around the update)."""
+    step = state.step + 1
+    lr = config.lr if lr_schedule is None else lr_schedule(step) * config.lr
+
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu_in, nu_in = state.mu, state.nu
+    if moment_dtype != "param":
+        from repro.optim.state_codec import moment_codecs, tree_decode
+
+        mu_c, nu_c = moment_codecs(moment_dtype)
+        mu_in = tree_decode(mu_c, mu_in)
+        nu_in = tree_decode(nu_c, nu_in)
+
+    new_mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), mu_in, grads
+    )
+    new_nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+        nu_in, grads,
+    )
+
+    def _upd(path, p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        update = mhat / (jnp.sqrt(vhat) + config.eps)
+        if config.weight_decay > 0.0:
+            ps = _path_str(path)
+            decayed = not any(s in ps for s in config.no_decay_substrings)
+            if decayed:
+                update = update + config.weight_decay * p
+        return (p - lr * update).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(_upd, params, new_mu, new_nu)
+    if moment_dtype != "param":
+        from repro.optim.state_codec import tree_encode
+
+        new_mu = tree_encode(mu_c, new_mu, params)
+        new_nu = tree_encode(nu_c, new_nu, params)
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,41 @@
+"""LR schedules as step -> multiplier callables (multiplied by base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule():
+    def sched(step):
+        return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+    return sched
+
+
+def cosine_schedule(total_steps: int, final_frac: float = 0.0):
+    def sched(step):
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return final_frac + (1.0 - final_frac) * cos
+
+    return sched
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def exponential_decay(decay_steps: int, decay_rate: float = 0.5):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        return decay_rate ** (step / max(decay_steps, 1))
+
+    return sched

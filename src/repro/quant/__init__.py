@@ -1,0 +1,43 @@
+"""Quantization substrate implementing the paper's Eqs. 4-7.
+
+- Weights: symmetric linear quantization (zero-centred grid), Eq. 4-5.
+- Activations: asymmetric linear quantization (non-zero zero-point), Eq. 6-7.
+- Calibration: min/max or percentile range estimation.
+- QAT: straight-through-estimator fake quantization.
+- QuantPolicy: per-unit bit assignment container + FQR (Eq. 13).
+"""
+from repro.quant.linear_quant import (
+    QuantParams,
+    weight_qparams,
+    activation_qparams,
+    quantize_weight,
+    dequantize_weight,
+    quantize_activation,
+    dequantize_activation,
+    fake_quant_weight,
+    fake_quant_activation,
+)
+from repro.quant.calibration import calibrate_minmax, calibrate_percentile, Calibrator
+from repro.quant.policy import QuantUnit, QuantPolicy, UnitKind, fqr
+from repro.quant.qat import ste_round, fake_quant_params_tree
+
+__all__ = [
+    "QuantParams",
+    "weight_qparams",
+    "activation_qparams",
+    "quantize_weight",
+    "dequantize_weight",
+    "quantize_activation",
+    "dequantize_activation",
+    "fake_quant_weight",
+    "fake_quant_activation",
+    "calibrate_minmax",
+    "calibrate_percentile",
+    "Calibrator",
+    "QuantUnit",
+    "QuantPolicy",
+    "UnitKind",
+    "fqr",
+    "ste_round",
+    "fake_quant_params_tree",
+]

@@ -1,0 +1,62 @@
+"""Range calibration for quantization.
+
+The paper determines r_v "through calibration" (Sec. III-C). We provide
+min/max and percentile calibrators plus a streaming Calibrator that
+accumulates ranges over batches (used to calibrate activations by running a
+few forward passes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def calibrate_minmax(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return jnp.min(x), jnp.max(x)
+
+
+def calibrate_percentile(
+    x: jnp.ndarray, pct: float = 99.9
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    lo = jnp.percentile(x, 100.0 - pct)
+    hi = jnp.percentile(x, pct)
+    return lo, hi
+
+
+class Calibrator:
+    """Streaming min/max (or percentile-of-batch EMA) range tracker.
+
+    Host-side utility: collects ranges for named tensors over calibration
+    batches; `ranges()` returns {name: (v_min, v_max)} as python floats.
+    """
+
+    def __init__(self, mode: str = "minmax", pct: float = 99.9, ema: float = 0.9):
+        assert mode in ("minmax", "percentile")
+        self.mode = mode
+        self.pct = pct
+        self.ema = ema
+        self._lo: Dict[str, float] = {}
+        self._hi: Dict[str, float] = {}
+
+    def observe(self, name: str, x) -> None:
+        x = np.asarray(x)
+        if self.mode == "minmax":
+            lo, hi = float(x.min()), float(x.max())
+            if name in self._lo:
+                self._lo[name] = min(self._lo[name], lo)
+                self._hi[name] = max(self._hi[name], hi)
+            else:
+                self._lo[name], self._hi[name] = lo, hi
+        else:
+            lo = float(np.percentile(x, 100.0 - self.pct))
+            hi = float(np.percentile(x, self.pct))
+            if name in self._lo:
+                self._lo[name] = self.ema * self._lo[name] + (1 - self.ema) * lo
+                self._hi[name] = self.ema * self._hi[name] + (1 - self.ema) * hi
+            else:
+                self._lo[name], self._hi[name] = lo, hi
+
+    def ranges(self) -> Dict[str, Tuple[float, float]]:
+        return {k: (self._lo[k], self._hi[k]) for k in self._lo}

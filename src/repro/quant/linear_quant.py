@@ -1,0 +1,107 @@
+"""Linear quantization exactly as the paper specifies (Eqs. 4-7).
+
+Weights (symmetric, Eq. 4-5):
+    s      = r_v / (2^b - 1),   r_v = v_max - v_min     (calibrated)
+    q      = clip(round(x / s), q_min, q_max)
+    q_min  = -2^(b-1) - 1   [paper's printed text; conventional grid is
+                             -2^(b-1) + 1 -- selectable via paper_exact]
+    q_max  =  2^(b-1) - 1
+
+Activations (asymmetric, Eq. 6-7):
+    Z = round((1 - v_max / r_v) * (2^b - 1))
+    q = clip(round(x / s + Z), 0, 2^b - 1)
+
+Dequantization is q * s (weights) / (q - Z) * s (activations).
+
+All functions take the bit width as a *python int or traced scalar*; when
+traced we keep everything in floating point so the whole pipeline stays
+jit-compatible (the integer grid is exact in fp32 for b <= 8 because
+|q| <= 255 << 2^24).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class QuantParams(NamedTuple):
+    """Scale/zero-point/clip bundle for one tensor."""
+
+    scale: jnp.ndarray  # () or per-channel
+    zero_point: jnp.ndarray  # () int-valued (0 for symmetric weights)
+    q_min: jnp.ndarray  # ()
+    q_max: jnp.ndarray  # ()
+    bits: jnp.ndarray  # () the configured bit width
+
+
+def _levels(bits):
+    return 2.0 ** jnp.asarray(bits, jnp.float32) - 1.0
+
+
+def weight_qparams(
+    v_min: jnp.ndarray,
+    v_max: jnp.ndarray,
+    bits,
+    paper_exact: bool = True,
+) -> QuantParams:
+    """Symmetric weight quantization parameters (Eq. 4).
+
+    paper_exact=True uses q_min = -2^(b-1) - 1 exactly as printed in Eq. 5;
+    False uses the conventional symmetric grid -2^(b-1) + 1.
+    """
+    bits_f = jnp.asarray(bits, jnp.float32)
+    r_v = jnp.maximum(v_max - v_min, 1e-8)
+    scale = r_v / _levels(bits_f)
+    half = 2.0 ** (bits_f - 1.0)
+    q_max = half - 1.0
+    q_min = -half - 1.0 if paper_exact else -half + 1.0
+    return QuantParams(
+        scale=scale,
+        zero_point=jnp.zeros_like(scale),
+        q_min=jnp.asarray(q_min, jnp.float32),
+        q_max=jnp.asarray(q_max, jnp.float32),
+        bits=bits_f,
+    )
+
+
+def activation_qparams(v_min: jnp.ndarray, v_max: jnp.ndarray, bits) -> QuantParams:
+    """Asymmetric activation quantization parameters (Eq. 6)."""
+    bits_f = jnp.asarray(bits, jnp.float32)
+    r_v = jnp.maximum(v_max - v_min, 1e-8)
+    scale = r_v / _levels(bits_f)
+    zero_point = jnp.round((1.0 - v_max / r_v) * _levels(bits_f))
+    return QuantParams(
+        scale=scale,
+        zero_point=zero_point,
+        q_min=jnp.zeros((), jnp.float32),
+        q_max=_levels(bits_f),
+        bits=bits_f,
+    )
+
+
+def quantize_weight(x: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    """Eq. 5: q = clip(round(x/s), q_min, q_max). Returns float-typed ints."""
+    return jnp.clip(jnp.round(x / qp.scale), qp.q_min, qp.q_max)
+
+
+def dequantize_weight(q: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    return q * qp.scale
+
+
+def quantize_activation(x: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    """Eq. 7: q = clip(round(x/s + Z), 0, 2^b - 1)."""
+    return jnp.clip(jnp.round(x / qp.scale + qp.zero_point), qp.q_min, qp.q_max)
+
+
+def dequantize_activation(q: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    return (q - qp.zero_point) * qp.scale
+
+
+def fake_quant_weight(x: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    """Quantize->dequantize in one shot (for QAT forward / PTQ simulation)."""
+    return dequantize_weight(quantize_weight(x, qp), qp)
+
+
+def fake_quant_activation(x: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    return dequantize_activation(quantize_activation(x, qp), qp)

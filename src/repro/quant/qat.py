@@ -1,0 +1,85 @@
+"""Quantization-aware training support.
+
+`ste_round` is round() with a straight-through gradient; composing the
+paper's quantizers with it makes fake-quant differentiable, so the QAT
+finetune in the HERO episode loop (Sec. III-E "we perform model retraining")
+is a standard gradient descent through the quantized forward.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.linear_quant import (
+    QuantParams,
+    weight_qparams,
+)
+
+
+@jax.custom_vjp
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def ste_fake_quant(x: jnp.ndarray, qp: QuantParams, symmetric: bool) -> jnp.ndarray:
+    """Differentiable fake quantization using the STE.
+
+    Gradients flow to x (straight-through inside the clip range, zero
+    outside — the standard LSQ-style clipping behaviour).
+    """
+    if symmetric:
+        q = jnp.clip(ste_round(x / qp.scale), qp.q_min, qp.q_max)
+        return q * qp.scale
+    q = jnp.clip(ste_round(x / qp.scale + qp.zero_point), qp.q_min, qp.q_max)
+    return (q - qp.zero_point) * qp.scale
+
+
+def fake_quant_params_tree(
+    params: Any,
+    bits_fn: Callable[[str], int],
+    ranges: Dict[str, Any] = None,
+    paper_exact: bool = True,
+) -> Any:
+    """Fake-quantize every weight leaf of a params pytree.
+
+    bits_fn maps the '/'-joined leaf path to a bit width (return 0 or >=16
+    to leave the leaf unquantized). ranges optionally maps path -> (lo, hi);
+    defaults to per-leaf min/max.
+    """
+
+    def _leaf(path, p):
+        parts = []
+        for q in path:
+            if hasattr(q, "key"):
+                parts.append(str(q.key))
+            elif hasattr(q, "idx"):
+                parts.append(str(q.idx))
+            else:
+                parts.append(str(q))
+        name = "/".join(parts)
+        bits = bits_fn(name)
+        if bits <= 0 or bits >= 16:
+            return p
+        if ranges is not None and name in ranges:
+            lo, hi = ranges[name]
+            lo = jnp.asarray(lo, jnp.float32)
+            hi = jnp.asarray(hi, jnp.float32)
+        else:
+            lo, hi = jnp.min(p), jnp.max(p)
+        qp = weight_qparams(lo, hi, bits, paper_exact=paper_exact)
+        return ste_fake_quant(p, qp, symmetric=True).astype(p.dtype)
+
+    return jax.tree_util.tree_map_with_path(_leaf, params)

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA device-count override here — smoke tests
+and benches must see the host's single device; only launch/dryrun.py forces
+512 placeholder devices (in its own process)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,74 @@
+"""DDPG agent + action mapping + reward tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.action import action_to_bits, bits_to_action
+from repro.core.ddpg import DDPGAgent, DDPGConfig, ReplayBuffer
+from repro.core.reward import cost_ratio, hero_reward
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.0, 1.0))
+def test_action_to_bits_range(a):
+    b = action_to_bits(a)
+    assert 1 <= b <= 8
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8))
+def test_action_bits_roundtrip(b):
+    assert action_to_bits(bits_to_action(b)) == b
+
+
+def test_action_bins_equal_width():
+    """Each bit width owns an equal slice of [0,1] (Eq. 3)."""
+    counts = np.zeros(9)
+    for a in np.linspace(0, 1, 8001):
+        counts[action_to_bits(float(a))] += 1
+    occupied = counts[1:9]
+    assert occupied.min() > 0.8 * occupied.max()
+
+
+def test_action_monotone():
+    prev = 0
+    for a in np.linspace(0, 1, 101):
+        b = action_to_bits(float(a))
+        assert b >= prev
+        prev = b
+
+
+def test_hero_reward_eq8():
+    # R = lambda * (psnr_cur - psnr_org + 1/cost_ratio)
+    r = hero_reward(psnr_cur=30.0, psnr_org=32.0,
+                    current_cost=5e5, original_cost=1e6, lam=0.1)
+    assert np.isclose(r, 0.1 * (30 - 32 + 2.0))
+    assert cost_ratio(5e5, 1e6) == 0.5
+    # lower cost => higher reward, all else equal
+    r_fast = hero_reward(30.0, 32.0, 2.5e5, 1e6)
+    assert r_fast > r
+
+
+def test_replay_buffer_wraps():
+    buf = ReplayBuffer(capacity=8, obs_dim=7)
+    for i in range(20):
+        buf.push(np.full(7, i), [0.5], [1.0], np.full(7, i + 1), False)
+    assert buf.size == 8
+    rng = np.random.RandomState(0)
+    obs, act, rew, nobs, done = buf.sample(rng, 4)
+    assert obs.shape == (4, 7) and obs.min() >= 12  # only newest survive
+
+
+def test_ddpg_learns_toy_bandit():
+    """Reward = 1 - (a - 0.8)^2: the actor should move towards 0.8."""
+    cfg = DDPGConfig(warmup_episodes=5, updates_per_episode=24,
+                     batch_size=32, noise_sigma0=0.4, seed=0)
+    agent = DDPGAgent(cfg)
+    obs = np.ones(7, np.float32)
+    for ep in range(40):
+        a = agent.act(obs)
+        r = 1.0 - (a - 0.8) ** 2
+        agent.observe_episode([(obs, [a], obs, True)], r)
+        agent.update()
+    final = np.mean([agent.act(obs, explore=False) for _ in range(5)])
+    assert abs(final - 0.8) < 0.25, f"actor converged to {final}"

@@ -1,0 +1,68 @@
+"""Gradient compression + rescale planning + straggler watchdog."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import (
+    compress,
+    compressed_bytes,
+    decompress,
+)
+from repro.distributed.fault_tolerance import StepWatchdog, plan_rescale
+
+
+def test_compression_roundtrip_bounded():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 128)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (128,)) * 10}
+    ct = compress(tree, jax.random.PRNGKey(2))
+    out = decompress(ct)
+    for k in tree:
+        x, y = np.asarray(tree[k]), np.asarray(out[k])
+        row_max = np.max(np.abs(x), axis=-1, keepdims=True)
+        assert np.all(np.abs(x - y) <= row_max / 127 + 1e-6), k
+    assert ct.codes["w"].dtype == jnp.int8
+
+
+def test_compression_unbiased():
+    """Stochastic rounding: the mean decode over many keys converges to x."""
+    x = {"w": jnp.asarray([[0.1, -0.37, 0.9231, 0.5004]])}
+    acc = np.zeros((1, 4))
+    n = 300
+    for i in range(n):
+        acc += np.asarray(decompress(compress(x, jax.random.PRNGKey(i)))["w"])
+    err = np.abs(acc / n - np.asarray(x["w"]))
+    scale = 0.9231 / 127
+    assert np.all(err < 3 * scale / np.sqrt(n) * 4), err  # CLT bound-ish
+
+
+def test_compression_byte_savings():
+    tree = {"w": jnp.zeros((256, 256), jnp.float32)}
+    ct = compress(tree, jax.random.PRNGKey(0))
+    raw = 256 * 256 * 4
+    assert compressed_bytes(ct) < raw / 3.5  # ~4x minus scale overhead
+
+
+def test_plan_rescale_preserves_global_batch():
+    p = plan_rescale(global_batch=256, microbatch_per_shard=1,
+                     old_dp=32, new_dp=16)
+    assert p.new_accum == 16 and p.global_batch == 256
+    p2 = plan_rescale(global_batch=256, microbatch_per_shard=1,
+                      old_dp=16, new_dp=32)
+    assert p2.new_accum == 8 and p2.global_batch == 256
+    with pytest.raises(ValueError):
+        plan_rescale(global_batch=100, microbatch_per_shard=1,
+                     old_dp=16, new_dp=32)
+
+
+def test_watchdog_flags_straggler():
+    flagged = []
+    wd = StepWatchdog(slo_factor=5.0,
+                      on_slow=lambda s, dt, med: flagged.append(s))
+    import time
+    for step in range(8):
+        wd.start()
+        time.sleep(0.012 if step != 6 else 0.2)
+        slow = wd.stop(step)
+        assert slow == (step == 6)
+    assert flagged == [6]

@@ -1,0 +1,149 @@
+"""Instant-NGP substrate: hash encoding, rendering, training, quant specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nerf.dataset import make_dataset
+from repro.nerf.hash_encoding import (
+    HashEncodingConfig,
+    hash_encode,
+    init_hash_tables,
+    level_corner_data,
+)
+from repro.nerf.ngp import (
+    NGPConfig,
+    init_ngp,
+    make_quant_units,
+    ngp_apply,
+    ngp_linear_names,
+    no_quant_spec,
+    sh_encode,
+    spec_from_policy,
+    uniform_quant_spec,
+)
+from repro.nerf.render import RenderConfig, render_rays
+from repro.nerf.scenes import SceneConfig
+from repro.nerf.train import TrainConfig, evaluate_psnr, train_ngp
+from repro.quant.policy import QuantPolicy
+
+CFG = NGPConfig(
+    hash=HashEncodingConfig(n_levels=4, log2_table_size=9, base_resolution=4,
+                            max_resolution=32),
+    hidden_dim=16, color_hidden_dim=16, geo_feat_dim=7, sh_degree=2,
+)
+
+
+def test_hash_encode_shapes_and_determinism():
+    key = jax.random.PRNGKey(0)
+    tables = init_hash_tables(key, CFG.hash)
+    pts = jax.random.uniform(key, (100, 3))
+    enc = hash_encode(tables, pts, CFG.hash)
+    assert enc.shape == (100, CFG.hash.out_dim)
+    enc2 = hash_encode(tables, pts, CFG.hash)
+    np.testing.assert_array_equal(np.asarray(enc), np.asarray(enc2))
+
+
+def test_hash_encode_interpolates_continuously():
+    """Small input perturbation -> small encoding change (trilerp)."""
+    key = jax.random.PRNGKey(1)
+    tables = init_hash_tables(key, CFG.hash)
+    p = jnp.asarray([[0.3, 0.4, 0.5]])
+    e1 = hash_encode(tables, p, CFG.hash)
+    e2 = hash_encode(tables, p + 1e-4, CFG.hash)
+    assert float(jnp.max(jnp.abs(e1 - e2))) < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**20))
+def test_corner_indices_in_range(seed):
+    """Every level's corner index stays within its table (hash wraps)."""
+    rng = np.random.RandomState(seed % 2**31)
+    pts = jnp.asarray(rng.rand(32, 3).astype(np.float32))
+    for level in range(CFG.hash.n_levels):
+        idx, w = level_corner_data(pts, level, CFG.hash)
+        n = CFG.hash.level_entries(level)
+        assert int(jnp.min(idx)) >= 0 and int(jnp.max(idx)) < n
+        # trilinear weights sum to 1
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, axis=1)), 1.0,
+                                   rtol=1e-5)
+
+
+def test_sh_encode_dim():
+    dirs = jnp.asarray([[0.0, 0.0, 1.0], [1.0, 0.0, 0.0]])
+    for deg in (0, 2, 4):
+        out = sh_encode(dirs, deg)
+        assert out.shape == (2, (deg + 1) ** 2)
+
+
+def test_quant_units_walk():
+    units = make_quant_units(CFG)
+    # N hash + 2L MLP decisions (paper: 8^(N+2L) design space)
+    assert len(units) == CFG.hash.n_levels + 2 * len(ngp_linear_names(CFG))
+    assert [u.index for u in units] == list(range(len(units)))
+
+
+def test_fp_sentinel_equals_no_quant():
+    key = jax.random.PRNGKey(0)
+    params = init_ngp(key, CFG)
+    pts = jax.random.uniform(key, (64, 3))
+    dirs = jnp.tile(jnp.asarray([[0.0, 0.0, 1.0]]), (64, 1))
+    s1, r1 = ngp_apply(params, pts, dirs, CFG, None)
+    spec32 = uniform_quant_spec(CFG, 32)
+    s2, r2 = ngp_apply(params, pts, dirs, CFG, spec32)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-5)
+
+
+def test_quantization_hurts_monotonically():
+    key = jax.random.PRNGKey(0)
+    params = init_ngp(key, CFG)
+    pts = jax.random.uniform(key, (256, 3))
+    dirs = jnp.tile(jnp.asarray([[0.0, 0.0, 1.0]]), (256, 1))
+    _, ref = ngp_apply(params, pts, dirs, CFG, None)
+    errs = []
+    for bits in (2, 4, 8):
+        spec = uniform_quant_spec(CFG, bits)
+        _, rgb = ngp_apply(params, pts, dirs, CFG, spec)
+        errs.append(float(jnp.mean((rgb - ref) ** 2)))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+def test_render_rays_composites_to_unit_weights():
+    key = jax.random.PRNGKey(0)
+    params = init_ngp(key, CFG)
+    rays_o = jnp.zeros((8, 3)) + jnp.asarray([0.0, 0.0, -1.2])
+    rays_d = jnp.tile(jnp.asarray([[0.0, 0.0, 1.0]]), (8, 1))
+    color, acc = render_rays(params, rays_o, rays_d, CFG,
+                             RenderConfig(n_samples=16), None, None)
+    assert color.shape == (8, 3)
+    assert float(jnp.min(color)) >= 0.0 and float(jnp.max(color)) <= 1.0 + 1e-5
+
+
+@pytest.mark.slow
+def test_training_improves_psnr():
+    ds = make_dataset(SceneConfig(name="lego", image_hw=20, n_train_views=4,
+                                  n_test_views=1))
+    tcfg = TrainConfig(steps=80, batch_rays=256, lr=5e-3)
+    params0 = init_ngp(jax.random.PRNGKey(0), CFG)
+    rcfg = RenderConfig(n_samples=16)
+    p0 = evaluate_psnr(params0, ds, CFG, rcfg)
+    params, _ = train_ngp(ds, CFG, rcfg, tcfg)
+    p1 = evaluate_psnr(params, ds, CFG, rcfg)
+    assert p1 > p0 + 2.0, f"{p0} -> {p1}"
+
+
+def test_spec_from_policy_consistency():
+    units = make_quant_units(CFG)
+    policy = QuantPolicy.uniform(units, 8).with_bits(
+        list(range(1, len(units) + 1))
+    )
+    n_lin = len(ngp_linear_names(CFG))
+    act_ranges = jnp.tile(jnp.asarray([[0.0, 1.0]]), (n_lin, 1))
+    spec = spec_from_policy(CFG, policy, act_ranges)
+    assert spec.hash_bits.shape == (CFG.hash.n_levels,)
+    # walk order: hash levels first
+    np.testing.assert_array_equal(
+        np.asarray(spec.hash_bits), np.arange(1, CFG.hash.n_levels + 1)
+    )

@@ -1,0 +1,118 @@
+"""Unit + property tests for the paper's quantizers (Eqs. 4-7)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.linear_quant import (
+    activation_qparams,
+    dequantize_activation,
+    dequantize_weight,
+    fake_quant_activation,
+    fake_quant_weight,
+    quantize_activation,
+    quantize_weight,
+    weight_qparams,
+)
+from repro.quant.policy import QuantPolicy, QuantUnit, UnitKind, fqr
+
+
+def test_weight_qparams_eq4():
+    qp = weight_qparams(jnp.float32(-1.0), jnp.float32(1.0), 8)
+    assert np.isclose(float(qp.scale), 2.0 / 255.0)  # r_v / (2^b - 1)
+    assert float(qp.q_max) == 127.0  # 2^(b-1) - 1
+    assert float(qp.q_min) == -129.0  # paper-exact: -2^(b-1) - 1
+
+
+def test_weight_qparams_conventional_grid():
+    qp = weight_qparams(jnp.float32(-1.0), jnp.float32(1.0), 8, paper_exact=False)
+    assert float(qp.q_min) == -127.0
+
+
+def test_activation_zero_point_eq6():
+    # v in [0, 4]: Z = round((1 - 4/4) * 255) = 0
+    qp = activation_qparams(jnp.float32(0.0), jnp.float32(4.0), 8)
+    assert float(qp.zero_point) == 0.0
+    # v in [-2, 2]: Z = round((1 - 2/4) * 255) = 128
+    qp = activation_qparams(jnp.float32(-2.0), jnp.float32(2.0), 8)
+    assert float(qp.zero_point) == 128.0
+    assert float(qp.q_max) == 255.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    lo=st.floats(-10, -0.1),
+    hi=st.floats(0.1, 10),
+)
+def test_weight_roundtrip_error_bound(bits, lo, hi):
+    """|x - dq(q(x))| <= s/2 for x inside the clip range."""
+    qp = weight_qparams(jnp.float32(lo), jnp.float32(hi), bits)
+    s = float(qp.scale)
+    xs = np.linspace(float(qp.q_min) * s, float(qp.q_max) * s, 101).astype(
+        np.float32
+    )
+    q = quantize_weight(jnp.asarray(xs), qp)
+    dq = np.asarray(dequantize_weight(q, qp))
+    assert np.all(np.abs(dq - xs) <= s / 2 + 1e-6)
+    # codes are integers on the grid
+    assert np.allclose(np.asarray(q), np.round(np.asarray(q)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    vmax=st.floats(0.5, 20),
+    frac=st.floats(0.0, 0.9),
+)
+def test_activation_roundtrip_error_bound(bits, vmax, frac):
+    vmin = -vmax * frac
+    qp = activation_qparams(jnp.float32(vmin), jnp.float32(vmax), bits)
+    s = float(qp.scale)
+    xs = np.linspace(vmin, vmax, 101).astype(np.float32)
+    dq = np.asarray(fake_quant_activation(jnp.asarray(xs), qp))
+    # zero-point rounding can add up to s/2 of extra offset
+    assert np.all(np.abs(dq - xs) <= s + 1e-6)
+    q = np.asarray(quantize_activation(jnp.asarray(xs), qp))
+    assert q.min() >= 0.0 and q.max() <= float(qp.q_max)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 7))
+def test_more_bits_less_error(bits):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(256).astype(np.float32))
+    lo, hi = jnp.min(x), jnp.max(x)
+    e1 = float(jnp.mean((fake_quant_weight(x, weight_qparams(lo, hi, bits)) - x) ** 2))
+    e2 = float(jnp.mean((fake_quant_weight(x, weight_qparams(lo, hi, bits + 1)) - x) ** 2))
+    assert e2 <= e1 + 1e-9
+
+
+def test_fqr_eq13():
+    assert fqr([8, 8, 4, 4]) == 6.0
+    assert fqr([]) == 0.0
+
+
+def test_policy_roundtrip():
+    units = [
+        QuantUnit("hash/level_0", UnitKind.HASH_LEVEL, 1, 2, 512, 0, 0),
+        QuantUnit("sigma/0:a", UnitKind.ACTIVATION, 0, 32, 16, 512, 1),
+        QuantUnit("sigma/0:w", UnitKind.WEIGHT, 0, 32, 16, 512, 2),
+    ]
+    p = QuantPolicy.uniform(units, 8).with_bits([3, 5, 7])
+    p2 = QuantPolicy.from_json(p.to_json())
+    assert p2.bits_by_name() == p.bits_by_name()
+    assert p.hash_level_bits() == [3]
+    assert p.weight_bits() == [7]
+    assert p.fqr() == 5.0
+    # model bits: hash 512*2*3 + weights 512*7
+    assert p.model_bits() == 512 * 2 * 3 + 512 * 7
+
+
+def test_observation_vector_shape():
+    u = QuantUnit("sigma/0:w", UnitKind.WEIGHT, 0, 32, 16, 512, 4)
+    obs = u.observation(prev_action=0.5)
+    assert len(obs) == 7  # Eqs. 1-2: seven-dimensional
+    assert obs[-1] == 1.0  # f_w/a = 1 for weights
+    u2 = QuantUnit("sigma/0:a", UnitKind.ACTIVATION, 0, 32, 16, 512, 3)
+    assert u2.observation(0.5)[-1] == 0.0
