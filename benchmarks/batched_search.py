@@ -1,0 +1,124 @@
+"""Policies-evaluated-per-second: scalar vs. batched HERO evaluation paths.
+
+Three measurements over the same workload trace:
+
+  1. simulator-only, scalar:   NeuRexSimulator.simulate per policy (the jit
+                               wrapper; add --numpy for the float64 oracle)
+  2. simulator-only, batched:  BatchedNeuRexSimulator.simulate_batch, one
+                               vmapped call for all K
+  3. full policy scoring:      BatchedQuantEnv.evaluate_population (vmapped
+                               simulator + vmapped PSNR-proxy render) vs the
+                               scalar env's simulate+proxy loop
+
+Usage (repo root must be on the path for `benchmarks.common`):
+  PYTHONPATH=src:. python benchmarks/batched_search.py [--k 64] [--scale quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALES, build_env
+from repro.core.batched_env import BatchedEnvConfig, BatchedQuantEnv
+from repro.hwsim import BatchedNeuRexSimulator, NeuRexSimulator
+from repro.quant.policy import QuantPolicy
+
+
+def _rate(n: int, seconds: float) -> str:
+    return f"{n / max(seconds, 1e-9):10.1f} policies/s ({seconds:.3f}s for {n})"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=64, help="batch of policies")
+    ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    print(f"[setup] building env at scale={args.scale} ...", flush=True)
+    env, _ = build_env("chair", SCALES[args.scale])
+    cfg = env.cfg
+    rng = np.random.RandomState(0)
+    K = args.k
+
+    bits = rng.randint(env.ecfg.b_min, env.ecfg.b_max + 1,
+                       size=(K, env.n_units))
+    benv = BatchedQuantEnv(env, BatchedEnvConfig(proxy_rays=256))
+    hb, wb, ab = benv.bits_to_arrays(bits)
+
+    # --- 1. scalar simulator loops ----------------------------------------
+    # numpy oracle = the pre-batching status quo; jax scalar = the thin
+    # wrapper (jitted + memoized) that now backs NeuRexSimulator.
+    def scalar_loop(backend: str, repeats: int) -> float:
+        sim = NeuRexSimulator(env.sim.cfg, backend=backend)
+        sim.simulate(  # warm the jit cache outside the timed region
+            env.trace, hb[0], wb[0], ab[0],
+            n_features=cfg.hash.n_features, resolutions=cfg.hash.resolutions(),
+        )
+        t0 = time.perf_counter()
+        for r in range(repeats):
+            for i in range(K):
+                sim.simulate(
+                    env.trace, hb[i], wb[i], ab[i],
+                    n_features=cfg.hash.n_features,
+                    resolutions=cfg.hash.resolutions(),
+                )
+        return (time.perf_counter() - t0) / repeats
+
+    t_numpy = scalar_loop("numpy", 1)
+    t_scalar = scalar_loop("jax", args.repeats)
+
+    # --- 2. batched simulator ---------------------------------------------
+    bsim = BatchedNeuRexSimulator(
+        env.trace, env.sim.cfg, n_features=cfg.hash.n_features,
+        resolutions=cfg.hash.resolutions(),
+    )
+    bsim.simulate_batch(hb, wb, ab)  # compile
+    # Cold: every batch sees unseen coarse-bit combos (memo cleared).
+    t0 = time.perf_counter()
+    for r in range(args.repeats):
+        bsim.clear_stats_memo()
+        out = bsim.simulate_batch(hb, wb, ab)
+        out["total_cycles"].sum()  # force materialization
+    t_batched_cold = (time.perf_counter() - t0) / args.repeats
+    # Warm: coarse combos already memoized (a converged population / the
+    # constraint-enforcement loop live here).
+    t0 = time.perf_counter()
+    for r in range(args.repeats):
+        out = bsim.simulate_batch(hb, wb, ab)
+        out["total_cycles"].sum()
+    t_batched = (time.perf_counter() - t0) / args.repeats
+
+    # --- 3. full policy scoring (sim + PSNR) -------------------------------
+    benv.evaluate_population(bits)  # compile
+    t0 = time.perf_counter()
+    for r in range(args.repeats):
+        benv.evaluate_population(bits)
+    t_pop = (time.perf_counter() - t0) / args.repeats
+
+    t0 = time.perf_counter()
+    for i in range(K):
+        policy = QuantPolicy.uniform(env.units, 8).with_bits(list(bits[i]))
+        env.simulate_policy(policy)
+        benv._psnr(env.params, bits[i : i + 1])
+    t_scalar_full = time.perf_counter() - t0
+
+    print(f"\n== NeuRex simulator, trace of {env.trace.n_points} points, "
+          f"K={K} policies ==")
+    print(f"  scalar numpy oracle:  {_rate(K, t_numpy)}")
+    print(f"  scalar jax wrapper:   {_rate(K, t_scalar)}")
+    print(f"  batched (cold memo):  {_rate(K, t_batched_cold)}")
+    print(f"  batched (warm memo):  {_rate(K, t_batched)}")
+    print(f"  speedup vs numpy:     "
+          f"{t_numpy / max(t_batched_cold, 1e-9):.1f}x cold, "
+          f"{t_numpy / max(t_batched, 1e-9):.1f}x warm")
+    print("\n== full policy scoring (latency + model size + PSNR proxy) ==")
+    print(f"  scalar loop:          {_rate(K, t_scalar_full)}")
+    print(f"  evaluate_population:  {_rate(K, t_pop)}")
+    print(f"  speedup:              {t_scalar_full / max(t_pop, 1e-9):8.1f}x")
+
+
+if __name__ == "__main__":
+    main()

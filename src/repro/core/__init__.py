@@ -5,7 +5,9 @@
 - reward:    hardware-aware reward (Eqs. 8-9)
 - env:       NGP quantization environment (observation Eqs. 1-2, episode
              walk, constraint enforcement, finetune + PSNR + simulator)
-- search:    the episodic HERO search loop
+- batched_env: population evaluation — K policies per step through the
+             vmapped simulator + vmapped PSNR proxy
+- search:    the episodic HERO search loop + population mode (CEM + DDPG)
 - baselines: PTQ / QAT / CAQ-proxy comparison methods
 - lm_env:    the same technique applied to the assigned LM architectures,
              with a TPU roofline cost model as hardware feedback
@@ -14,7 +16,19 @@ from repro.core.action import action_to_bits, bits_to_action
 from repro.core.ddpg import DDPGAgent, DDPGConfig, ReplayBuffer
 from repro.core.reward import hero_reward, cost_ratio
 from repro.core.env import NGPQuantEnv, EnvConfig, EpisodeResult
-from repro.core.search import hero_search, SearchConfig, SearchResult
+from repro.core.batched_env import (
+    BatchedEnvConfig,
+    BatchedQuantEnv,
+    PopulationEval,
+)
+from repro.core.search import (
+    hero_search,
+    hero_population_search,
+    SearchConfig,
+    SearchResult,
+    PopulationSearchConfig,
+    PopulationSearchResult,
+)
 from repro.core.baselines import (
     ptq_baseline,
     qat_baseline,
@@ -33,9 +47,15 @@ __all__ = [
     "NGPQuantEnv",
     "EnvConfig",
     "EpisodeResult",
+    "BatchedEnvConfig",
+    "BatchedQuantEnv",
+    "PopulationEval",
     "hero_search",
+    "hero_population_search",
     "SearchConfig",
     "SearchResult",
+    "PopulationSearchConfig",
+    "PopulationSearchResult",
     "ptq_baseline",
     "qat_baseline",
     "caq_proxy_baseline",

@@ -104,7 +104,10 @@ class NGPQuantEnv:
         self._obs_scale = np.maximum(np.abs(obs).max(axis=0), 1e-6)
 
         # All-8-bit baseline: original cost + PSNR_org (Sec. III-D).
-        base = self.sim.baseline(self.trace, 8, n_features=cfg.hash.n_features)
+        base = self.sim.baseline(
+            self.trace, 8, n_features=cfg.hash.n_features,
+            resolutions=cfg.hash.resolutions(),
+        )
         self.original_cost = base.total_cycles
         base_policy = QuantPolicy.uniform(self.units, 8)
         base_spec = spec_from_policy(cfg, base_policy, self.act_ranges)
@@ -141,19 +144,44 @@ class NGPQuantEnv:
         return jnp.asarray(ranges, jnp.float32)
 
     # ------------------------------------------------------------------
+    def unit_index_maps(self):
+        """Walk-order unit index -> simulator-array position, per kind.
+
+        Returns {"h"|"w"|"a": (unit_indices, positions, width)} — the single
+        source of truth for mapping a bits vector onto the simulator's
+        (hash_bits, w_bits, a_bits) arrays; shared with BatchedQuantEnv.
+        """
+        if not hasattr(self, "_unit_maps"):
+            names = ngp_linear_names(self.cfg)
+            maps = {k: ([], []) for k in ("h", "w", "a")}
+            for i, u in enumerate(self.units):
+                if u.kind == UnitKind.HASH_LEVEL:
+                    key, pos = "h", u.param_size  # param_size = level index
+                else:
+                    key = "w" if u.kind == UnitKind.WEIGHT else "a"
+                    pos = names.index(u.name.rsplit(":", 1)[0])
+                maps[key][0].append(i)
+                maps[key][1].append(pos)
+            widths = {"h": self.cfg.hash.n_levels, "w": len(names), "a": len(names)}
+            self._unit_maps = {
+                k: (np.asarray(idx), np.asarray(pos), widths[k])
+                for k, (idx, pos) in maps.items()
+            }
+        return self._unit_maps
+
     def _policy_arrays(self, policy: QuantPolicy):
-        names = ngp_linear_names(self.cfg)
-        hb = [8.0] * self.cfg.hash.n_levels
-        wb = [8.0] * len(names)
-        ab = [8.0] * len(names)
-        for u in policy.units:
-            if u.kind == UnitKind.HASH_LEVEL:
-                hb[u.param_size] = float(u.bits)
-            elif u.kind == UnitKind.WEIGHT:
-                wb[names.index(u.name.rsplit(":", 1)[0])] = float(u.bits)
-            else:
-                ab[names.index(u.name.rsplit(":", 1)[0])] = float(u.bits)
-        return hb, wb, ab
+        assert [u.name for u in policy.units] == [u.name for u in self.units], (
+            "policy units must be in the env's walk order"
+        )
+        bits = np.asarray([float(u.bits) for u in policy.units])
+        maps = self.unit_index_maps()
+        out = []
+        for key in ("h", "w", "a"):
+            unit_idx, pos, width = maps[key]
+            arr = np.full(width, 8.0)
+            arr[pos] = bits[unit_idx]
+            out.append(list(arr))
+        return tuple(out)
 
     def simulate_policy(self, policy: QuantPolicy):
         hb, wb, ab = self._policy_arrays(policy)

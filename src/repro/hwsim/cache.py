@@ -12,12 +12,18 @@ sequential cache walk into a vectorized computation:
 
 This is exact (bit-identical hit/miss sequence to a sequential simulation)
 and runs at numpy speed over multi-million-access traces.
+
+`direct_mapped_stats` is the same algorithm in jax.numpy: a pure function of
+the address stream that jit-compiles and `jax.vmap`s over a batch of address
+streams (one per candidate quantization policy), which is what the batched
+NeuRex simulator uses to score K policies in one call.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -61,6 +67,44 @@ def simulate_direct_mapped(
     # Cold misses = first touch of each line.
     cold = int(np.unique(lines).size)
     return CacheStats(accesses=n, hits=hits, misses=n - hits, cold_misses=cold)
+
+
+def direct_mapped_stats(
+    addresses: jnp.ndarray, n_lines: int, line_bytes: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """jax.numpy port of `simulate_direct_mapped` (same sort-based algorithm).
+
+    addresses: (N,) integer byte addresses in access order, N static > 0.
+    Returns (hits, misses, cold_misses) as int32 scalars. Traceable under
+    jit/vmap: the sort is the only data-dependent step and XLA batches it.
+
+    Fast path: instead of a stable argsort by set plus two gathers, fuse the
+    access time into the sort key (``set * N + t`` — unique, so an unstable
+    sort is deterministic) and carry the line ids as a second sort operand.
+    After sorting by (set, time), an access hits iff its line equals the
+    previous line in the same set (same set + same tag <=> same line).
+    """
+    import jax.lax as lax
+
+    n = addresses.shape[0]
+    lines = addresses // line_bytes
+    sets = lines % n_lines
+
+    if n_lines * (n + 1) < 2**31:  # fused int32 key fits
+        key = sets * n + jnp.arange(n, dtype=jnp.int32)
+        ks, ls = lax.sort((key, lines), num_keys=1, is_stable=False)
+        hit = (ks[1:] // n == ks[:-1] // n) & (ls[1:] == ls[:-1])
+    else:  # giant traces: stable argsort on the raw set ids
+        tags = lines // n_lines
+        order = jnp.argsort(sets, stable=True)
+        s_sorted = sets[order]
+        t_sorted = tags[order]
+        hit = (s_sorted[1:] == s_sorted[:-1]) & (t_sorted[1:] == t_sorted[:-1])
+    hits = jnp.sum(hit).astype(jnp.int32)
+
+    lines_sorted = lax.sort((lines,), is_stable=False)[0]
+    cold = (jnp.sum(lines_sorted[1:] != lines_sorted[:-1]) + 1).astype(jnp.int32)
+    return hits, jnp.int32(n) - hits, cold
 
 
 class DirectMappedCache:

@@ -20,6 +20,9 @@ import dataclasses
 import math
 from typing import List, Sequence, Tuple
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.hwsim.config import HWConfig
 
 
@@ -60,6 +63,38 @@ def bit_serial_matmul_cycles(
         total=float(compute + weight_load),
         macs=m * k * n,
     )
+
+
+def serial_factor_jnp(w_bits: jnp.ndarray, a_bits: jnp.ndarray, cfg: HWConfig):
+    """Traced counterpart of HWConfig.serial_factor (elementwise over layers)."""
+    if cfg.serial_mode == "stripes":
+        return a_bits
+    if cfg.serial_mode == "max":
+        return jnp.maximum(w_bits, a_bits)
+    raise ValueError(f"unknown serial_mode {cfg.serial_mode!r}")
+
+
+def mlp_cycles_jnp(
+    m: int,
+    layer_dims: Sequence[Tuple[int, int]],
+    w_bits: jnp.ndarray,
+    a_bits: jnp.ndarray,
+    cfg: HWConfig,
+) -> jnp.ndarray:
+    """jax.numpy port of `mlp_cycles`: total MLP-unit cycles as a traced f32
+    scalar. Layer dims and tiling are static (they come from the trace); only
+    the bit widths are traced, so the whole stack vmaps over policies."""
+    d_in = np.asarray([d for d, _ in layer_dims], np.float32)  # (n_layers,)
+    d_out = np.asarray([d for _, d in layer_dims], np.float32)
+    row_tiles = np.ceil(m / cfg.systolic_rows).astype(np.float32)
+    col_tiles = np.ceil(d_out / cfg.systolic_cols).astype(np.float32)
+    fill = float(cfg.systolic_rows + cfg.systolic_cols)
+
+    serial = serial_factor_jnp(w_bits, a_bits, cfg)  # (n_layers,) traced
+    per_tile = d_in * serial + fill
+    compute = row_tiles * col_tiles * per_tile
+    weight_load = col_tiles * d_in * w_bits
+    return jnp.sum(compute + weight_load)
 
 
 def mlp_cycles(

@@ -1,0 +1,104 @@
+"""Hypothesis compatibility shim.
+
+The test suite uses a small slice of hypothesis (`@given` over
+`st.integers`/`st.floats` ranges with `@settings`). On containers without
+the package, collection used to crash and take five test modules down with
+it. This shim re-exports the real library when it is installed; otherwise it
+provides a deterministic fallback that runs each property test over the
+range endpoints plus a fixed number of seeded samples — weaker than real
+hypothesis (no shrinking, no adaptive generation) but it keeps every
+property exercised on a fresh checkout.
+
+Usage in test modules:
+
+    from _hypothesis_shim import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 12  # random samples per strategy (plus endpoints)
+
+    class _Strategy:
+        def __init__(self, lo, hi, kind):
+            self.lo = lo
+            self.hi = hi
+            self.kind = kind
+
+        def examples(self, rng):
+            if self.kind == "int":
+                vals = [self.lo, self.hi] + [
+                    int(rng.randint(self.lo, self.hi + 1))
+                    for _ in range(_FALLBACK_EXAMPLES)
+                ]
+            else:
+                vals = [float(self.lo), float(self.hi)] + [
+                    float(rng.uniform(self.lo, self.hi))
+                    for _ in range(_FALLBACK_EXAMPLES)
+                ]
+            return vals
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(min_value, max_value, "int")
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(min_value, max_value, "float")
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        """No-op stand-in for hypothesis.settings used as a decorator."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test over endpoint + seeded-random examples per strategy.
+
+        Positional strategies bind to the test's rightmost parameters and
+        keyword strategies by name (hypothesis semantics); any leftover
+        leading parameters stay visible to pytest as fixtures.
+        """
+        import inspect
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters)
+            bound = dict(
+                zip(params[len(params) - len(arg_strategies):], arg_strategies)
+            )
+            bound.update(kw_strategies)
+            free = [sig.parameters[p] for p in params if p not in bound]
+
+            @functools.wraps(fn)
+            def wrapper(*outer_args, **outer_kwargs):
+                rng = _np.random.RandomState(0)
+                names = list(bound)
+                examples = [bound[k].examples(rng) for k in names]
+                n = max((len(e) for e in examples), default=0)
+                outer = dict(zip((p.name for p in free), outer_args))
+                outer.update(outer_kwargs)
+                for i in range(n):
+                    kws = {k: e[i % len(e)] for k, e in zip(names, examples)}
+                    fn(**outer, **kws)
+
+            wrapper.__signature__ = sig.replace(parameters=free)
+            return wrapper
+
+        return deco

@@ -1,0 +1,209 @@
+"""Batched evaluation path: vmapped simulator parity against the scalar
+float64 oracle, BatchedQuantEnv smoke, population search smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.hwsim import (
+    BatchedNeuRexSimulator,
+    HWConfig,
+    NeuRexSimulator,
+    build_trace,
+    build_trace_constants,
+    policy_latency,
+)
+from repro.nerf.hash_encoding import HashEncodingConfig
+from repro.nerf.ngp import NGPConfig
+from repro.nerf.render import RenderConfig
+
+CFG = NGPConfig(
+    hash=HashEncodingConfig(n_levels=4, log2_table_size=9, base_resolution=4,
+                            max_resolution=32),
+    hidden_dim=16, color_hidden_dim=16, geo_feat_dim=7, sh_degree=2,
+)
+HW = HWConfig(coarse_levels=2)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    rng = np.random.RandomState(0)
+    rays_o = rng.randn(48, 3).astype(np.float32) * 0.1
+    rays_d = rng.randn(48, 3).astype(np.float32)
+    rays_d /= np.linalg.norm(rays_d, axis=1, keepdims=True)
+    return build_trace(CFG, RenderConfig(n_samples=8), rays_o, rays_d)
+
+
+@pytest.fixture(scope="module")
+def random_policies(trace):
+    rng = np.random.RandomState(7)
+    K = 12
+    n_mlp = len(trace.mlp_dims)
+    return (
+        rng.randint(1, 9, size=(K, CFG.hash.n_levels)).astype(np.float32),
+        rng.randint(1, 9, size=(K, n_mlp)).astype(np.float32),
+        rng.randint(1, 9, size=(K, n_mlp)).astype(np.float32),
+    )
+
+
+def test_vmapped_matches_scalar_oracle(trace, random_policies):
+    """Acceptance criterion: a batch of >= 8 policies in one call matches the
+    scalar simulator within 1e-3 relative tolerance — and the cache miss
+    counts (integers) match EXACTLY."""
+    hb, wb, ab = random_policies
+    assert hb.shape[0] >= 8
+    oracle = NeuRexSimulator(HW, backend="numpy")
+    bsim = BatchedNeuRexSimulator(trace, HW, n_features=CFG.hash.n_features)
+    batch = bsim.simulate_batch(hb, wb, ab)
+
+    for i in range(hb.shape[0]):
+        ref = oracle.simulate(
+            trace, hb[i], wb[i], ab[i], n_features=CFG.hash.n_features
+        )
+        for key, want in [
+            ("total_cycles", ref.total_cycles),
+            ("model_bytes", ref.model_bytes),
+            ("encode_cycles", ref.encode_cycles),
+            ("mlp_compute_cycles", ref.mlp_compute_cycles),
+            ("dram_bytes", ref.dram_bytes),
+            ("cycles_per_ray", ref.cycles_per_ray),
+        ]:
+            got = float(batch[key][i])
+            assert got == pytest.approx(want, rel=1e-3), (i, key)
+        assert int(batch["grid_misses"][i]) == ref.grid_cache.misses
+        assert int(batch["grid_hits"][i]) == ref.grid_cache.hits
+        assert int(batch["grid_cold_misses"][i]) == ref.grid_cache.cold_misses
+
+
+def test_pure_jax_policy_latency_vmaps(trace, random_policies):
+    """The fused `policy_latency` fn is directly jax.vmap-able and agrees
+    with the memoized class path."""
+    hb, wb, ab = random_policies
+    tc = build_trace_constants(trace, HW, CFG.hash.n_features)
+    fused = jax.jit(
+        jax.vmap(lambda h, w, a: policy_latency(h, w, a, tc, HW, 0.5))
+    )(jnp.asarray(hb), jnp.asarray(wb), jnp.asarray(ab))
+    bsim = BatchedNeuRexSimulator(trace, HW, n_features=CFG.hash.n_features)
+    batch = bsim.simulate_batch(hb, wb, ab)
+    np.testing.assert_allclose(
+        np.asarray(fused["total_cycles"]), batch["total_cycles"], rtol=1e-5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fused["grid_misses"]), batch["grid_misses"]
+    )
+
+
+def test_scalar_wrapper_delegates_to_jax(trace):
+    """Default NeuRexSimulator backend is the jitted jax path and agrees
+    with the float64 oracle."""
+    jax_sim = NeuRexSimulator(HW)
+    oracle = NeuRexSimulator(HW, backend="numpy")
+    assert jax_sim.backend == "jax"
+    a = jax_sim.baseline(trace, 8, n_features=CFG.hash.n_features)
+    b = oracle.baseline(trace, 8, n_features=CFG.hash.n_features)
+    assert a.total_cycles == pytest.approx(b.total_cycles, rel=1e-3)
+    assert a.grid_cache.misses == b.grid_cache.misses
+    assert a.model_bytes == pytest.approx(b.model_bytes, rel=1e-3)
+
+
+def test_stats_memo_reused_across_policies(trace):
+    """Policies sharing coarse-level bits share one cache simulation."""
+    bsim = BatchedNeuRexSimulator(trace, HW, n_features=CFG.hash.n_features)
+    n_mlp = len(trace.mlp_dims)
+    K = 10
+    hb = np.full((K, CFG.hash.n_levels), 8.0, np.float32)
+    hb[:, HW.coarse_levels:] = np.random.RandomState(0).randint(
+        1, 9, size=(K, CFG.hash.n_levels - HW.coarse_levels)
+    )  # vary only FINE levels -> identical coarse combo
+    wb = np.full((K, n_mlp), 8.0, np.float32)
+    bsim.simulate_batch(hb, wb, wb)
+    assert bsim.cache_stats_memo_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# BatchedQuantEnv + population search (tiny end-to-end smoke)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_env():
+    from repro.core import EnvConfig, NGPQuantEnv
+    from repro.nerf.dataset import make_dataset
+    from repro.nerf.scenes import SceneConfig
+    from repro.nerf.train import TrainConfig, train_ngp
+
+    ds = make_dataset(
+        SceneConfig(name="chair", image_hw=12, n_train_views=3, n_test_views=2)
+    )
+    rcfg = RenderConfig(n_samples=8)
+    tcfg = TrainConfig(steps=10, batch_rays=64)
+    params, _ = train_ngp(ds, CFG, rcfg, tcfg)
+    return NGPQuantEnv(
+        params, ds, CFG, rcfg, tcfg,
+        EnvConfig(finetune_steps=2, trace_rays=32, calib_points=128),
+        HW,
+    )
+
+
+def test_batched_env_population_eval(tiny_env):
+    from repro.core import BatchedEnvConfig, BatchedQuantEnv
+
+    benv = BatchedQuantEnv(tiny_env, BatchedEnvConfig(proxy_rays=64))
+    K = 8
+    bits = np.random.RandomState(0).randint(1, 9, size=(K, tiny_env.n_units))
+    ev = benv.evaluate_population(bits)
+    assert ev.k == K
+    assert ev.psnr.shape == ev.reward.shape == ev.latency_cycles.shape == (K,)
+    assert np.all(ev.latency_cycles > 0)
+    assert np.all(np.isfinite(ev.psnr))
+    # FQR is the mean bit width (Eq. 13).
+    np.testing.assert_allclose(ev.fqr, bits.mean(axis=1))
+    # Latencies agree with the scalar env on the same policies.
+    from repro.quant.policy import QuantPolicy
+
+    for i in range(3):
+        policy = QuantPolicy.uniform(tiny_env.units, 8).with_bits(list(bits[i]))
+        ref = tiny_env.simulate_policy(policy)
+        assert ev.latency_cycles[i] == pytest.approx(ref.total_cycles, rel=1e-3)
+        assert ev.model_bytes[i] == pytest.approx(ref.model_bytes, rel=1e-3)
+
+
+def test_population_search_smoke(tiny_env):
+    from repro.core import (
+        BatchedEnvConfig,
+        BatchedQuantEnv,
+        PopulationSearchConfig,
+        hero_population_search,
+    )
+    from repro.core.ddpg import DDPGConfig
+
+    benv = BatchedQuantEnv(tiny_env, BatchedEnvConfig(proxy_rays=64))
+    res = hero_population_search(
+        benv,
+        PopulationSearchConfig(n_iterations=2, population=8, verbose=False,
+                               seed=0, exact_rescore_top=1),
+        DDPGConfig(warmup_episodes=1, updates_per_episode=2),
+    )
+    assert res.policies_evaluated == 16
+    assert len(res.history) == 2
+    assert len(res.best_bits) == tiny_env.n_units
+    assert all(1 <= b <= 8 for b in res.best_bits)
+    assert np.isfinite(res.best_reward)
+    # Best reward is the max over everything evaluated.
+    all_rewards = np.concatenate([h.eval.reward for h in res.history])
+    assert res.best_reward == pytest.approx(all_rewards.max())
+    # Exact re-score ran the top proxy policy through the scalar env.
+    assert res.best_exact is not None
+    assert res.best_exact.bits == res.best_bits
+    assert np.isfinite(res.best_exact.psnr)
+
+
+def test_scalar_search_unchanged(tiny_env):
+    """The original single-policy episodic loop still runs."""
+    from repro.core import SearchConfig, hero_search
+    from repro.core.ddpg import DDPGConfig
+
+    res = hero_search(
+        tiny_env, SearchConfig(n_episodes=2, verbose=False),
+        DDPGConfig(warmup_episodes=1, updates_per_episode=2),
+    )
+    assert len(res.history) == 2
+    assert res.best is not None

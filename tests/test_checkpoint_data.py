@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.checkpoint import (
     CheckpointManager,
@@ -78,8 +78,9 @@ def test_elastic_restore_resharded(tmp_path):
     the elastic path: save on mesh A, restore on mesh B."""
     t = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
     save_checkpoint(tmp_path, 1, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("data",))
     sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))
     like = {"w": jax.ShapeDtypeStruct((4, 4), np.float32)}
     got, _ = restore_checkpoint(tmp_path, like=like, shardings={"w": sh})

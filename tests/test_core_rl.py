@@ -1,7 +1,7 @@
 """DDPG agent + action mapping + reward tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.action import action_to_bits, bits_to_action
 from repro.core.ddpg import DDPGAgent, DDPGConfig, ReplayBuffer

@@ -2,7 +2,7 @@
 cache behaviour, bit-serial scaling."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.hwsim import HWConfig, NeuRexSimulator, build_trace
 from repro.hwsim.cache import simulate_direct_mapped
