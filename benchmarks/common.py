@@ -27,7 +27,7 @@ from repro.nerf.hash_encoding import HashEncodingConfig
 from repro.nerf.ngp import NGPConfig
 from repro.nerf.render import RenderConfig
 from repro.nerf.scenes import SceneConfig
-from repro.nerf.train import TrainConfig, evaluate_psnr, train_ngp
+from repro.nerf.train import TrainConfig, train_ngp
 
 SCENES = ("chair", "lego", "ficus")
 RESULTS_DIR = Path("experiments/ngp_tables")
@@ -58,7 +58,10 @@ SCALES = {
 }
 
 
-def build_env(scene: str, scale: BenchScale, latency_target=None, seed=0):
+def build_env(
+    scene: str, scale: BenchScale, latency_target=None, seed=0,
+    render_backend: str = "fused",
+):
     ds = make_dataset(SceneConfig(
         name=scene, image_hw=scale.image_hw,
         n_train_views=scale.n_train_views, n_test_views=scale.n_test_views,
@@ -74,17 +77,20 @@ def build_env(scene: str, scale: BenchScale, latency_target=None, seed=0):
     rcfg = RenderConfig(n_samples=scale.n_samples)
     tcfg = TrainConfig(steps=scale.train_steps, batch_rays=512, lr=5e-3)
     params, _ = train_ngp(ds, cfg, rcfg, tcfg)
-    fp_psnr = evaluate_psnr(params, ds, cfg, rcfg)
     env = NGPQuantEnv(
         params, ds, cfg, rcfg, tcfg,
         EnvConfig(
             finetune_steps=scale.finetune_steps,
             trace_rays=scale.trace_rays,
             latency_target=latency_target,
+            render_backend=render_backend,
         ),
         HWConfig(coarse_levels=min(8, scale.n_levels // 2)),
         seed=seed,
     )
+    # Full-precision anchor through the same engine every method uses
+    # (occupancy-culled fused when render_backend="fused").
+    fp_psnr = env.eval_psnr(params, None)
     return env, fp_psnr
 
 

@@ -1,0 +1,193 @@
+"""Render-engine throughput: reference vs fused full-frame PSNR evaluation.
+
+Three engines over the same trained scene and held-out views:
+
+  host_reference   — the pre-engine evaluation loop: fake-quant
+                     `render_rays` per chunk with a host sync
+                     (`np.asarray`) per chunk — the old `evaluate_psnr`.
+  device_reference — same fake-quant oracle, but device-resident frames
+                     (`lax.map` + on-device SE, one scalar per view).
+  fused            — the full engine: occupancy-culled sample compaction +
+                     integer kernel inference (`repro.nerf.fast_render`).
+
+Reports rays/sec and per-evaluation ("episode eval") seconds, checks the
+fused-vs-reference PSNR parity band (0.1 dB), and writes BENCH_render.json
+at the repo root.
+
+Usage (repo root must be on the path for `benchmarks.common`):
+  PYTHONPATH=src:. python benchmarks/render_throughput.py [--scale quick]
+      [--repeats 3] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALES, BenchScale
+from repro.nerf.dataset import make_dataset
+from repro.nerf.fast_render import FastRenderEngine
+from repro.nerf.hash_encoding import HashEncodingConfig
+from repro.nerf.ngp import NGPConfig, uniform_quant_spec
+from repro.nerf.occupancy import bake_occupancy
+from repro.nerf.render import RenderConfig, render_rays
+from repro.nerf.scenes import SceneConfig
+from repro.nerf.train import TrainConfig, psnr, train_ngp
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_render.json"
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rcfg"))
+def _host_chunk(params, rays_o, rays_d, spec, cfg, rcfg):
+    color, _ = render_rays(params, rays_o, rays_d, cfg, rcfg, spec, None)
+    return color
+
+
+def host_reference_psnr(params, ds, cfg, rcfg, spec, chunk=4096) -> float:
+    """The pre-engine evaluation path: one host sync per ray chunk."""
+    total_se, total_px = 0.0, 0
+    for v in range(ds.test_rays_o.shape[0]):
+        ro, rd, gt = ds.test_rays_o[v], ds.test_rays_d[v], ds.test_rgb[v]
+        preds = []
+        for s in range(0, ro.shape[0], chunk):
+            preds.append(np.asarray(_host_chunk(
+                params, jnp.asarray(ro[s:s + chunk]),
+                jnp.asarray(rd[s:s + chunk]), spec, cfg, rcfg,
+            )))
+        pred = np.concatenate(preds)
+        total_se += float(((pred - gt) ** 2).sum())
+        total_px += gt.size
+    return psnr(total_se / total_px)
+
+
+def _time(fn, repeats: int) -> float:
+    fn()  # warm the jit caches outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
+    ap.add_argument("--scene", default="chair")
+    ap.add_argument("--repeats", type=int, default=10,
+                    help="timed evaluations per engine (evals are ~ms-scale;"
+                         " too few repeats just measures scheduler noise)")
+    ap.add_argument("--bits", type=int, default=8,
+                    help="uniform quantization width under test")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: quick scale")
+    args = ap.parse_args()
+    if args.quick:
+        args.scale = "quick"
+
+    scale: BenchScale = SCALES[args.scale]
+    print(f"[setup] scene={args.scene} scale={scale.name}: dataset + train "
+          f"({scale.train_steps} steps) ...", flush=True)
+    ds = make_dataset(SceneConfig(
+        name=args.scene, image_hw=scale.image_hw,
+        n_train_views=scale.n_train_views, n_test_views=scale.n_test_views,
+    ))
+    cfg = NGPConfig(
+        hash=HashEncodingConfig(
+            n_levels=scale.n_levels, log2_table_size=scale.log2_table,
+            base_resolution=4, max_resolution=scale.max_res,
+        ),
+        hidden_dim=scale.hidden, color_hidden_dim=scale.hidden,
+        geo_feat_dim=15, sh_degree=3,
+    )
+    rcfg = RenderConfig(n_samples=scale.n_samples, stratified=False)
+    params, _ = train_ngp(
+        ds, cfg, rcfg, TrainConfig(steps=scale.train_steps, batch_rays=512)
+    )
+    spec = uniform_quant_spec(cfg, args.bits)
+
+    print("[setup] baking occupancy grid ...", flush=True)
+    t0 = time.perf_counter()
+    occ = bake_occupancy(params, cfg, resolution=32)
+    bake_s = time.perf_counter() - t0
+
+    n_rays = int(ds.test_rays_o.shape[0] * ds.test_rays_o.shape[1])
+
+    engines = {
+        "device_reference": FastRenderEngine(
+            params, cfg, rcfg, spec=spec, occ=None, mode="reference"
+        ),
+        "fused": FastRenderEngine(
+            params, cfg, rcfg, spec=spec, occ=occ, mode="fused"
+        ),
+    }
+    budget = engines["fused"].test_views_budget(ds)
+    samples_total = n_rays * rcfg.n_samples
+
+    results = {
+        "scale": scale.name, "scene": args.scene, "bits": args.bits,
+        "rays_per_eval": n_rays, "n_samples": rcfg.n_samples,
+        "occupancy": {
+            "resolution": occ.resolution,
+            "occupied_fraction": round(occ.occupied_fraction, 4),
+            "bake_seconds": round(bake_s, 3),
+            "sample_budget_per_chunk": budget,
+        },
+        "engines": {},
+    }
+
+    eval_s = {}
+    eval_s["host_reference"] = _time(
+        lambda: host_reference_psnr(params, ds, cfg, rcfg, spec), args.repeats
+    )
+    psnrs = {"host_reference": host_reference_psnr(params, ds, cfg, rcfg, spec)}
+    for name, eng in engines.items():
+        eval_s[name] = _time(lambda e=eng: e.evaluate_psnr(ds), args.repeats)
+        psnrs[name] = eng.evaluate_psnr(ds)
+
+    print(f"\n== full-frame PSNR evaluation, {n_rays} rays x "
+          f"{rcfg.n_samples} samples, uniform {args.bits}-bit ==")
+    for name in ("host_reference", "device_reference", "fused"):
+        rate = n_rays / max(eval_s[name], 1e-9)
+        speedup = eval_s["host_reference"] / max(eval_s[name], 1e-9)
+        results["engines"][name] = {
+            "eval_seconds": round(eval_s[name], 4),
+            "rays_per_sec": round(rate, 1),
+            "psnr": round(psnrs[name], 4),
+            "speedup_vs_host_reference": round(speedup, 2),
+        }
+        print(f"  {name:17s} {rate:10.0f} rays/s   "
+              f"{eval_s[name]*1e3:8.1f} ms/eval   PSNR {psnrs[name]:7.3f}   "
+              f"{speedup:5.2f}x vs host ref")
+
+    from repro.nerf.fast_render import _test_set_plan
+    plan = _test_set_plan(ds, occ, engines["fused"].rcfg,
+                          engines["fused"].chunk, cfg)
+    n_chunks, samples_staged = plan.take.shape[0], plan.take.size
+    culled = 1.0 - (plan.budget * n_chunks) / samples_staged
+    parity = abs(psnrs["fused"] - psnrs["device_reference"])
+    results["fused_psnr_delta_db"] = round(parity, 4)
+    results["fused_speedup_vs_host_reference"] = results["engines"]["fused"][
+        "speedup_vs_host_reference"
+    ]
+    results["fused_speedup_vs_device_reference"] = round(
+        eval_s["device_reference"] / max(eval_s["fused"], 1e-9), 2
+    )
+    print(f"\n  culled sample fraction (budget): ~{culled:.0%} of "
+          f"{samples_total} samples")
+    print(f"  fused-vs-reference PSNR delta:   {parity:.4f} dB "
+          f"(acceptance band 0.1 dB)")
+
+    OUT_PATH.write_text(json.dumps(results, indent=2))
+    print(f"\n[out] wrote {OUT_PATH}")
+    if parity > 0.1:
+        raise SystemExit(f"PSNR parity {parity:.3f} dB exceeds 0.1 dB band")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,6 @@ import numpy as np
 
 from repro.core.env import NGPQuantEnv
 from repro.nerf.ngp import spec_from_policy
-from repro.nerf.train import evaluate_psnr
 from repro.quant.policy import QuantPolicy, UnitKind
 
 
@@ -62,7 +61,7 @@ def ptq_baseline(env: NGPQuantEnv, bits: int) -> BaselineResult:
     uniform = [bits] * env.n_units
     policy = QuantPolicy.uniform(env.units, bits)
     spec = spec_from_policy(env.cfg, policy, env.act_ranges)
-    psnr = evaluate_psnr(env.params, env.dataset, env.cfg, env.rcfg, spec)
+    psnr = env.eval_psnr(env.params, spec)
     return _result(env, f"NGP-PTQ({bits}b)", uniform, psnr)
 
 
@@ -89,7 +88,7 @@ def _unit_sensitivities(env: NGPQuantEnv, probe_bits: int = 4) -> np.ndarray:
 
     This is the "content-aware" signal: it depends on the trained scene.
     """
-    base = evaluate_psnr(env.params, env.dataset, env.cfg, env.rcfg, None)
+    base = env.eval_psnr(env.params, None)
     sens = np.zeros(env.n_units)
     full = [32] * env.n_units  # 32 = full-precision sentinel (>=16)
     for i in range(env.n_units):
@@ -97,7 +96,7 @@ def _unit_sensitivities(env: NGPQuantEnv, probe_bits: int = 4) -> np.ndarray:
         bits[i] = probe_bits
         policy = QuantPolicy.uniform(env.units, 8).with_bits(bits)
         spec = spec_from_policy(env.cfg, policy, env.act_ranges)
-        p = evaluate_psnr(env.params, env.dataset, env.cfg, env.rcfg, spec)
+        p = env.eval_psnr(env.params, spec)
         sens[i] = max(base - p, 0.0)
     return sens
 

@@ -10,7 +10,10 @@ vmapped calls:
     NeuRex analytic model — same trace, same numbers as the scalar path);
   - reconstruction quality: a *PSNR proxy* — render a fixed subset of
     held-out rays under each policy's fake-quant spec with shared weights,
-    vmapped over the K bit arrays. Optionally the shared weights are first
+    vmapped over the K bit arrays, with empty-space samples culled against
+    the scalar env's occupancy grid (`repro.nerf.fast_render`; the grid
+    and sample budget are policy-independent, so culling vmaps cleanly).
+    Optionally the shared weights are first
     QAT-finetuned under the batch-mean policy (`shared_finetune_steps`), a
     middle ground between no retraining (pure PTQ proxy) and the scalar
     env's per-policy finetune.
@@ -37,8 +40,8 @@ import numpy as np
 from repro.core.env import NGPQuantEnv
 from repro.core.reward import hero_reward
 from repro.hwsim.batched import BatchedNeuRexSimulator
+from repro.nerf.fast_render import build_cull_plan, fast_render_rays
 from repro.nerf.ngp import NGPQuantSpec
-from repro.nerf.render import render_rays
 from repro.nerf.train import finetune_ngp
 
 
@@ -113,14 +116,30 @@ class BatchedQuantEnv:
 
         rcfg = dataclasses.replace(env.rcfg, stratified=False)
 
+        # Empty-space culling for the proxy render: the proxy rays and the
+        # occupancy grid are both fixed, so the compaction is precomputed
+        # once (`CullPlan`, policy-independent) and the culled renderer
+        # vmaps over the K traced bit arrays exactly like the dense one
+        # (the field query is fake-quant `ngp_apply` — the integer fused
+        # mode needs concrete bits and stays a scalar-env affair).
+        self._proxy_plan = (
+            build_cull_plan(
+                env.occ, np.asarray(self._proxy_rays[0])[None],
+                np.asarray(self._proxy_rays[1])[None], None, rcfg, cfg,
+            )
+            if env.occ is not None
+            else None
+        )
+
         def _proxy_mse(params, hb, wb, ab):
             spec = NGPQuantSpec(
                 hash_bits=hb, weight_bits=wb, act_bits=ab,
                 act_ranges=env.act_ranges,
             )
-            color, _ = render_rays(
+            color, _ = fast_render_rays(
                 params, self._proxy_rays[0], self._proxy_rays[1],
-                cfg, rcfg, spec, None,
+                cfg, rcfg, spec, occ=env.occ, mode="reference",
+                plan=self._proxy_plan,
             )
             return jnp.mean((color - self._proxy_rays[2]) ** 2)
 

@@ -36,6 +36,7 @@ from repro.nerf.ngp import (
     ngp_linear_names,
     spec_from_policy,
 )
+from repro.nerf.occupancy import bake_occupancy
 from repro.nerf.render import RenderConfig
 from repro.nerf.train import TrainConfig, evaluate_psnr, finetune_ngp
 from repro.quant.policy import QuantPolicy, QuantUnit, UnitKind
@@ -50,6 +51,11 @@ class EnvConfig:
     b_min: int = 1
     b_max: int = 8
     lam: float = 0.1  # reward scale (Eq. 8); ablated in benchmarks
+    # Episode PSNR render engine: "fused" = occupancy-culled integer
+    # inference (repro.nerf.fast_render); "reference" = fake-quant oracle.
+    render_backend: str = "fused"
+    occ_resolution: int = 32
+    occ_threshold: float = 1e-2
 
 
 @dataclasses.dataclass
@@ -99,6 +105,19 @@ class NGPQuantEnv:
         # "determined through calibration").
         self.act_ranges = self._calibrate(rng)
 
+        # Occupancy grid baked ONCE from the frozen pretrained geometry;
+        # every episode PSNR render culls empty space against it (QAT
+        # finetunes are short, so the geometry stays inside the dilated
+        # grid). `render_backend="reference"` keeps the dense oracle.
+        self.occ = (
+            bake_occupancy(
+                params, cfg, resolution=ecfg.occ_resolution,
+                threshold=ecfg.occ_threshold,
+            )
+            if ecfg.render_backend == "fused"
+            else None
+        )
+
         # Observation normalization constants (per-dim max over units).
         obs = np.asarray([u.observation(1.0) for u in self.units], np.float32)
         self._obs_scale = np.maximum(np.abs(obs).max(axis=0), 1e-6)
@@ -114,10 +133,19 @@ class NGPQuantEnv:
         ft, _ = finetune_ngp(
             dict(params), dataset, cfg, rcfg, tcfg, base_spec, ecfg.finetune_steps
         )
-        self.psnr_org = evaluate_psnr(ft, dataset, cfg, rcfg, base_spec)
+        self.psnr_org = self.eval_psnr(ft, base_spec)
 
         # Per-unit latency slope (cycles per bit) for constraint enforcement.
         self._latency_slopes = self._estimate_slopes()
+
+    # ------------------------------------------------------------------
+    def eval_psnr(self, params: Dict, spec: Optional[NGPQuantSpec]) -> float:
+        """Episode PSNR through the configured render engine — the shared
+        entry point for baselines and benchmarks as well."""
+        return evaluate_psnr(
+            params, self.dataset, self.cfg, self.rcfg, spec,
+            occ=self.occ, mode=self.ecfg.render_backend,
+        )
 
     # ------------------------------------------------------------------
     def _calibrate(self, rng) -> jnp.ndarray:
@@ -261,7 +289,7 @@ class NGPQuantEnv:
             dict(self.params), self.dataset, self.cfg, self.rcfg, self.tcfg,
             spec, steps,
         )
-        psnr = evaluate_psnr(ft_params, self.dataset, self.cfg, self.rcfg, spec)
+        psnr = self.eval_psnr(ft_params, spec)
         lat = self.simulate_policy(policy)
         reward = hero_reward(psnr, self.psnr_org, lat.total_cycles,
                              self.original_cost, lam=self.ecfg.lam)

@@ -4,26 +4,36 @@ The CUDA reference walks each ray serially with early termination. TPU
 adaptation (DESIGN.md §3): rays are the vector dimension (blocks of 128
 lanes), samples are walked by a SEQUENTIAL grid axis with the running
 transmittance carried in a VMEM scratch accumulator — TPU grids execute
-in order, so the carried accumulator is the idiomatic scan. No early-exit
-branch (SIMD lanes would diverge); transmittance underflow gives the same
-numerics.
+in order, so the carried accumulator is the idiomatic scan. No per-lane
+early-exit branch (SIMD lanes would diverge), but whole sample-chunks CAN
+be skipped once every ray in the block is saturated: a carried block-done
+flag gates the chunk body with `pl.when` (`early_stop=True`). Skipped
+chunks would have contributed at most `t_eps` per channel, so the numerics
+match the dense walk to that tolerance.
 
   alpha_i = 1 - exp(-sigma_i * delta_i)
   T_i     = prod_{j<i} (1 - alpha_j)      (exclusive)
   color   = sum_i T_i * alpha_i * rgb_i ; acc = sum_i T_i * alpha_i
+
+Prefer `repro.kernels.ops.alpha_composite` (the canonical entry): it adds
+the pure-jnp reference fallback. This raw entry auto-detects `interpret`
+(compiled on TPU, interpret-mode elsewhere) when left at None.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _composite_kernel(sigma_ref, rgb_ref, delta_ref, color_ref, acc_ref,
-                      trans_ref, *, n_s):
+                      trans_ref, done_ref, *, n_s, early_stop, t_eps):
     """Block: (br rays, bs samples). Grid axis 1 walks sample chunks."""
     s = pl.program_id(1)
 
@@ -32,44 +42,68 @@ def _composite_kernel(sigma_ref, rgb_ref, delta_ref, color_ref, acc_ref,
         trans_ref[...] = jnp.ones_like(trans_ref)
         color_ref[...] = jnp.zeros_like(color_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        done_ref[...] = jnp.zeros_like(done_ref)
 
-    sigma = sigma_ref[...]  # (br, bs)
-    delta = delta_ref[...]
-    alpha = 1.0 - jnp.exp(-sigma * delta)  # (br, bs)
-    keep = 1.0 - alpha
-    # exclusive cumprod along samples within the chunk
-    cum = jnp.cumprod(keep, axis=1)
-    excl = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
-    T = trans_ref[...] * excl  # (br, bs) transmittance at each sample
-    w = T * alpha  # weights
-    color_ref[...] += jnp.einsum(
-        "rs,rsc->rc", w, rgb_ref[...], preferred_element_type=jnp.float32
-    )
-    acc_ref[...] += jnp.sum(w, axis=1, keepdims=True)
-    trans_ref[...] = trans_ref[...] * cum[:, -1:]
+    def _step():
+        sigma = sigma_ref[...]  # (br, bs)
+        delta = delta_ref[...]
+        alpha = 1.0 - jnp.exp(-sigma * delta)  # (br, bs)
+        keep = 1.0 - alpha
+        # exclusive cumprod along samples within the chunk
+        cum = jnp.cumprod(keep, axis=1)
+        excl = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+        T = trans_ref[...] * excl  # (br, bs) transmittance at each sample
+        w = T * alpha  # weights
+        color_ref[...] += jnp.einsum(
+            "rs,rsc->rc", w, rgb_ref[...], preferred_element_type=jnp.float32
+        )
+        acc_ref[...] += jnp.sum(w, axis=1, keepdims=True)
+        trans_ref[...] = trans_ref[...] * cum[:, -1:]
+        if early_stop:
+            # All rays in the block saturated -> skip the remaining chunks.
+            done_ref[...] = (
+                (jnp.max(trans_ref[...]) < t_eps).astype(jnp.float32).reshape(1, 1)
+            )
+
+    if early_stop:
+        pl.when(done_ref[0, 0] == 0.0)(_step)
+    else:
+        _step()
 
 
-@functools.partial(jax.jit, static_argnames=("br", "bs", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("br", "bs", "interpret", "early_stop", "t_eps")
+)
 def alpha_composite(
     sigma: jnp.ndarray,  # (R, S) f32
     rgb: jnp.ndarray,  # (R, S, 3) f32
     delta: jnp.ndarray,  # (R, S) f32 sample spacing
     br: int = 128,
     bs: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    early_stop: bool = False,
+    t_eps: float = 1e-6,
 ):
     """Returns (color (R, 3), acc (R, 1)) — white-background compositing is
     the caller's affair (color + (1-acc)*bg)."""
+    interpret = resolve_interpret(interpret)
     R, S = sigma.shape
     pr, ps = (-R) % br, (-S) % bs
-    sig = jnp.pad(sigma, ((0, pr), (0, ps)))
-    dl = jnp.pad(delta, ((0, pr), (0, ps)))
+    # Sample padding contributes zero (sigma = delta = 0). Ray padding is
+    # made instantly opaque so it cannot hold a partial block's done flag
+    # at trans = 1 forever (padded rows are sliced off the outputs anyway).
+    sig = jnp.pad(jnp.pad(sigma, ((0, 0), (0, ps))), ((0, pr), (0, 0)),
+                  constant_values=1e4)
+    dl = jnp.pad(jnp.pad(delta, ((0, 0), (0, ps))), ((0, pr), (0, 0)),
+                 constant_values=1.0)
     rg = jnp.pad(rgb, ((0, pr), (0, ps), (0, 0)))
     Rp, Sp = R + pr, S + ps
     n_s = Sp // bs
 
     color, acc = pl.pallas_call(
-        functools.partial(_composite_kernel, n_s=n_s),
+        functools.partial(
+            _composite_kernel, n_s=n_s, early_stop=early_stop, t_eps=t_eps
+        ),
         grid=(Rp // br, n_s),
         in_specs=[
             pl.BlockSpec((br, bs), lambda r, s: (r, s)),
@@ -84,7 +118,10 @@ def alpha_composite(
             jax.ShapeDtypeStruct((Rp, 3), jnp.float32),
             jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((br, 1), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((br, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
         interpret=interpret,
     )(sig, rg, dl)
     return color[:R], acc[:R]

@@ -1,0 +1,26 @@
+"""Backend detection shared by the raw Pallas kernels and `ops.py`.
+
+`repro.kernels.ops` is the canonical entry point for all kernels: it
+dispatches between the compiled Pallas path (TPU), interpret-mode Pallas
+(CPU validation), and the pure-jnp references. The raw kernel modules use
+`resolve_interpret` so that calling them directly still does the right
+thing per backend (compiled on TPU, interpreted elsewhere), but callers
+should prefer `ops` — it adds the reference fallback and keeps the
+dispatch policy in one place.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None = auto: compiled on TPU, interpret-mode elsewhere."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

@@ -5,15 +5,22 @@ levels (T <= 2^14) the classic trick re-expresses the 8-corner gather as
 (points*8, T_tile) one-hot x (T_tile, F) matmul, accumulated over T tiles
 (DESIGN.md §3). The one-hot never leaves VMEM; the MXU does the "gather".
 Features are padded to the 128-lane boundary by the wrapper.
+
+Prefer `repro.kernels.ops.hash_gather` (the canonical entry): it adds the
+XLA-take reference fallback. This raw entry auto-detects `interpret`
+(compiled on TPU, interpret-mode elsewhere) when left at None.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
 
 
 def _hash_gather_kernel(idx_ref, table_ref, out_ref, acc_ref, *, bt, n_t):
@@ -45,9 +52,10 @@ def hash_gather(
     table: jnp.ndarray,  # (T, F) level features
     bp: int = 256,
     bt: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Returns (P, F) = table[indices] via one-hot matmuls."""
+    interpret = resolve_interpret(interpret)
     P = indices.shape[0]
     T, F = table.shape
     pf = (-F) % 128

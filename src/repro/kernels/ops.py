@@ -1,15 +1,20 @@
-"""Public jit'd entry points for the Pallas kernels.
+"""Public jit'd entry points for the Pallas kernels — the CANONICAL entry.
 
 `use_pallas="auto"` runs the kernels on TPU backends and falls back to the
 jnp reference elsewhere; `True` forces interpret-mode Pallas (Python-level
 execution of the kernel body — the CPU validation path), `False` forces
 the reference.
+
+Call kernels through this module rather than the raw `pallas_call`
+wrappers: this layer owns the backend dispatch policy (Pallas vs
+reference) and keeps kw defaults consistent. The raw entries auto-detect
+`interpret` via `repro.kernels.backend` so direct calls stay correct, but
+they never fall back to the reference.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.kernels import ref
+from repro.kernels.backend import on_tpu as _on_tpu
 from repro.kernels.alpha_composite import alpha_composite as _alpha_pallas
 from repro.kernels.decode_attention_kernel import (
     decode_attention as _decode_pallas,
@@ -19,10 +24,6 @@ from repro.kernels.flash_attention_kernel import (
 )
 from repro.kernels.hash_encoding_kernel import hash_gather as _hash_pallas
 from repro.kernels.quant_matmul import quant_matmul as _qmm_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _resolve(use_pallas):
@@ -42,6 +43,8 @@ def quant_matmul(x_codes, w_codes, sx, sw, zx, use_pallas="auto", **kw):
 
 
 def alpha_composite(sigma, rgb, delta, use_pallas="auto", **kw):
+    """kw passes through to the kernel — notably `early_stop=True` enables
+    the transmittance-based chunk skipping (ignored by the reference)."""
     run, interpret = _resolve(use_pallas)
     if not run:
         return ref.alpha_composite_ref(sigma, rgb, delta)

@@ -10,15 +10,22 @@ bits on a systolic array would waste it.
 Tiling: (bm x bk) @ (bk x bn) with an int32 VMEM accumulator scratch; K is
 the innermost (sequential) grid axis so the accumulator carries across K
 tiles — the standard Pallas matmul schedule, MXU-aligned (128) tiles.
+
+Prefer `repro.kernels.ops.quant_matmul` (the canonical entry): it adds the
+pure-jnp reference fallback. This raw entry auto-detects `interpret`
+(compiled on TPU, interpret-mode elsewhere) when left at None.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
 
 
 def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, zx_ref, o_ref, acc_ref, *, n_k):
@@ -62,9 +69,10 @@ def quant_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Returns f32 (M, N) = dequant((x - zx) @ w) * sx * sw."""
+    interpret = resolve_interpret(interpret)
     M, K = x_codes.shape
     K2, N = w_codes.shape
     assert K == K2, (x_codes.shape, w_codes.shape)

@@ -18,8 +18,30 @@ from repro.nerf.render import render_rays, RenderConfig
 from repro.nerf.scenes import SceneConfig, make_scene, render_ground_truth
 from repro.nerf.dataset import NGPDataset, make_dataset
 from repro.nerf.train import train_ngp, psnr, TrainConfig, evaluate_psnr, finetune_ngp
+from repro.nerf.occupancy import (
+    OccupancyGrid,
+    bake_occupancy,
+    cull_budget,
+    occupancy_lookup,
+)
+from repro.nerf.fast_render import (
+    FastRenderEngine,
+    FusedPack,
+    build_fused_pack,
+    fast_render_rays,
+    fused_ngp_apply,
+)
 
 __all__ = [
+    "OccupancyGrid",
+    "bake_occupancy",
+    "cull_budget",
+    "occupancy_lookup",
+    "FastRenderEngine",
+    "FusedPack",
+    "build_fused_pack",
+    "fast_render_rays",
+    "fused_ngp_apply",
     "HashEncodingConfig",
     "init_hash_tables",
     "hash_encode",

@@ -1,0 +1,706 @@
+"""Fused quantized render engine: occupancy-culled, kernel-backed inference.
+
+The training path (`render_rays`) stays the differentiable fake-quant
+oracle. This module is the INFERENCE path the HERO reward loop actually
+spends its time in — full-frame PSNR after each episode finetune, and the
+batched env's PSNR proxy — rebuilt around three ideas:
+
+1. **Empty-space culling** (`nerf/occupancy.py`): sample points falling
+   outside the scene box or in unoccupied grid cells are compacted away
+   BEFORE the field query. For fixed rays (held-out eval views, the proxy
+   ray subset) the compaction is precomputed once on the host as a
+   `CullPlan` — pure gather indices, no cumsum/scatter in the hot path,
+   and an EXACT per-chunk budget (the active mask depends only on
+   geometry and the frozen grid, never on params or the policy). Ad-hoc
+   rays fall back to an on-device cumsum compaction.
+2. **Real integer inference** (`mode="fused"`): a `FusedPack` precomputes
+   int8 weight codes per linear layer and fake-quantized hash tables;
+   activations are quantized to integer codes on the fly and the five NGP
+   linears lower through `kernels.ops.quant_matmul` (int8 codes + int32
+   MXU accumulation), the hash lookups through `kernels.ops.hash_gather`.
+   On backends without an int8 matmul unit (CPU), the same codes run on a
+   float carrier — identical quantization grid, f32 accumulation — because
+   XLA's int32 dot is ~2.5x slower than f32 there; `use_pallas=True`
+   forces the integer kernels everywhere (the parity tests do).
+   `mode="reference"` keeps fake-quant `ngp_apply` as the oracle inside
+   the same culled pipeline.
+3. **Device-resident frames**: full-frame evaluation stages the test set
+   on device once, then runs ONE jitted call per evaluation — `lax.map`
+   over ray chunks with squared error reduced on device — so a single
+   scalar crosses to the host where the old loop synced a color buffer
+   per 4096-ray chunk.
+
+Compositing goes through `kernels.ops.alpha_composite` (with
+transmittance-based early chunk termination on the Pallas path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.backend import on_tpu
+from repro.kernels.ops import (
+    alpha_composite as ops_alpha_composite,
+    hash_gather as ops_hash_gather,
+    quant_matmul as ops_quant_matmul,
+)
+from repro.nerf.hash_encoding import level_corner_data
+from repro.nerf.ngp import (
+    NGPConfig,
+    NGPQuantSpec,
+    ngp_apply,
+    ngp_linear_names,
+    no_quant_spec,
+    sh_encode,
+)
+from repro.nerf.occupancy import (
+    OccupancyGrid,
+    cull_budget,
+    occupancy_lookup,
+    sample_active_mask,
+)
+from repro.quant.linear_quant import (
+    activation_qparams,
+    fake_quant_weight,
+    quantize_weight,
+    weight_qparams,
+)
+
+# ---------------------------------------------------------------------------
+# FusedPack: host-built integer inference parameters for ONE concrete policy.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FusedPack:
+    """Per-layer integer codes + scales, and fake-quantized hash tables.
+
+    `modes[i]` (static) selects the lowering of linear layer i:
+      "int"        — integer activation/weight codes through `quant_matmul`
+                     (float carrier off-TPU, same grid — module docstring);
+      "float_qact" — f32 matmul on pre-fake-quantized weights, activations
+                     fake-quantized on the fly (bits outside the int8
+                     range, e.g. the 9..15 band);
+      "float"      — plain f32 matmul (>= 16-bit sentinel on both sides).
+    """
+
+    layers: Dict[str, Dict[str, jnp.ndarray]]
+    hash_tables: Dict[str, jnp.ndarray]
+    modes: Tuple[str, ...]
+
+
+jax.tree_util.register_dataclass(
+    FusedPack, data_fields=["layers", "hash_tables"], meta_fields=["modes"]
+)
+
+
+def build_fused_pack(
+    params: Dict, cfg: NGPConfig, spec: Optional[NGPQuantSpec] = None
+) -> FusedPack:
+    """Lower a (params, spec) pair to integer inference form.
+
+    Requires a CONCRETE spec (host floats, not tracers): the bit widths
+    pick the lowering per layer at build time. The int8 codes fed to
+    `quant_matmul` are clamped to the MXU range [-128, 127]; the
+    paper-exact grid's extra -2^(b-1)-1 level only exceeds that at b = 8,
+    where codes that hit it clamp by one LSB (the float carrier `w_deq`
+    keeps the exact unclamped grid, so the default off-TPU path matches
+    the fake-quant oracle to roundoff).
+    """
+    if spec is None:
+        spec = no_quant_spec(cfg)
+    wb = np.asarray(spec.weight_bits, np.float32)
+    ab = np.asarray(spec.act_bits, np.float32)
+    ar = np.asarray(spec.act_ranges, np.float32)
+    hb = np.asarray(spec.hash_bits, np.float32)
+    pe = spec.paper_exact
+
+    layers: Dict[str, Dict[str, jnp.ndarray]] = {}
+    modes = []
+    for i, name in enumerate(ngp_linear_names(cfg)):
+        w, b = params[name]["w"], params[name]["b"]
+        wbi, abi = float(wb[i]), float(ab[i])
+        lo, hi = float(ar[i, 0]), float(ar[i, 1])
+        if wbi <= 8.0 and abi <= 8.0:
+            qp_w = weight_qparams(jnp.min(w), jnp.max(w), wbi, paper_exact=pe)
+            qp_a = activation_qparams(lo, hi, abi)
+            off = 2.0 ** (abi - 1.0)  # shift codes [0, 2^b-1] into int8
+            w_codes = quantize_weight(w, qp_w)
+            layers[name] = dict(
+                w_codes=jnp.clip(w_codes, -128, 127).astype(jnp.int8),
+                w_deq=(w_codes * qp_w.scale).astype(jnp.float32),
+                b=b,
+                sx=jnp.asarray(qp_a.scale, jnp.float32),
+                sw=jnp.asarray(qp_w.scale, jnp.float32),
+                zx=jnp.asarray(qp_a.zero_point - off, jnp.int32),
+                zx_f=jnp.asarray(qp_a.zero_point, jnp.float32),
+                qmax=jnp.asarray(qp_a.q_max, jnp.float32),
+                off=jnp.asarray(off, jnp.float32),
+            )
+            modes.append("int")
+        else:
+            if wbi < 16.0:
+                qp_w = weight_qparams(jnp.min(w), jnp.max(w), wbi, paper_exact=pe)
+                w = fake_quant_weight(w, qp_w)
+            if abi < 16.0:
+                qp_a = activation_qparams(lo, hi, abi)
+                layers[name] = dict(
+                    w=w, b=b,
+                    sx=jnp.asarray(qp_a.scale, jnp.float32),
+                    zx_f=jnp.asarray(qp_a.zero_point, jnp.float32),
+                    qmax=jnp.asarray(qp_a.q_max, jnp.float32),
+                )
+                modes.append("float_qact")
+            else:
+                layers[name] = dict(w=w, b=b)
+                modes.append("float")
+
+    tables: Dict[str, jnp.ndarray] = {}
+    for l in range(cfg.hash.n_levels):
+        t = params["hash"][f"level_{l}"]
+        bits = float(hb[l])
+        if bits < 16.0:
+            qp = weight_qparams(jnp.min(t), jnp.max(t), bits, paper_exact=pe)
+            t = fake_quant_weight(t, qp)
+        tables[f"level_{l}"] = t
+    return FusedPack(layers=layers, hash_tables=tables, modes=tuple(modes))
+
+
+def _fused_linear(pack: FusedPack, i: int, name: str, x, use_pallas):
+    lyr = pack.layers[name]
+    mode = pack.modes[i]
+    if mode == "int":
+        codes = jnp.clip(jnp.round(x / lyr["sx"] + lyr["zx_f"]), 0.0, lyr["qmax"])
+        if use_pallas is True or (use_pallas == "auto" and on_tpu()):
+            ci8 = (codes - lyr["off"]).astype(jnp.int8)
+            y = ops_quant_matmul(
+                ci8, lyr["w_codes"], lyr["sx"], lyr["sw"], lyr["zx"],
+                use_pallas=use_pallas,
+            )
+        else:
+            # Float carrier of the SAME integer grid (see module docstring):
+            # (codes - Z) * s is exactly the dequantized activation, w_deq
+            # the dequantized weight codes.
+            y = ((codes - lyr["zx_f"]) * lyr["sx"]) @ lyr["w_deq"]
+        return y + lyr["b"]
+    if mode == "float_qact":
+        codes = jnp.clip(jnp.round(x / lyr["sx"] + lyr["zx_f"]), 0.0, lyr["qmax"])
+        xq = (codes - lyr["zx_f"]) * lyr["sx"]
+        return xq @ lyr["w"] + lyr["b"]
+    return x @ lyr["w"] + lyr["b"]
+
+
+def fused_ngp_apply(
+    pack: FusedPack,
+    points: jnp.ndarray,  # (P, 3) in [0, 1]
+    dirs: jnp.ndarray,  # (P, 3) unit
+    cfg: NGPConfig,
+    use_pallas="auto",
+    corner_data=None,  # optional precomputed (idx (L,P,8), w (L,P,8))
+    sh: Optional[jnp.ndarray] = None,  # optional precomputed (P, sh_dim)
+):
+    """Integer-mode field query. Mirrors `ngp_apply`'s fake-quant forward;
+    exact up to float roundoff (integer accumulation where lowered).
+    `corner_data` / `sh` take the geometry-only work precomputed by a
+    `CullPlan` for fixed sample points."""
+    feats = []
+    for l in range(cfg.hash.n_levels):
+        if corner_data is None:
+            idx, w = level_corner_data(points, l, cfg.hash)  # (P, 8)
+        else:
+            idx, w = corner_data[0][l], corner_data[1][l]
+        vals = ops_hash_gather(
+            idx.reshape(-1), pack.hash_tables[f"level_{l}"], use_pallas=use_pallas
+        ).reshape(idx.shape + (cfg.hash.n_features,))
+        feats.append(jnp.sum(vals * w[..., None], axis=1))
+    enc = jnp.concatenate(feats, axis=-1)
+
+    names = ngp_linear_names(cfg)
+    h = _fused_linear(pack, 0, names[0], enc, use_pallas)
+    h = jax.nn.relu(h)
+    h = _fused_linear(pack, 1, names[1], h, use_pallas)
+    raw_sigma, geo = h[..., 0], h[..., 1:]
+    if cfg.density_activation == "exp":
+        sigma = jnp.exp(jnp.clip(raw_sigma, -10.0, 10.0))
+    else:
+        sigma = jax.nn.softplus(raw_sigma)
+
+    if sh is None:
+        sh = sh_encode(dirs, cfg.sh_degree)
+    c = jnp.concatenate([geo, sh], axis=-1)
+    c = jax.nn.relu(_fused_linear(pack, 2, names[2], c, use_pallas))
+    c = jax.nn.relu(_fused_linear(pack, 3, names[3], c, use_pallas))
+    rgb = jax.nn.sigmoid(_fused_linear(pack, 4, names[4], c, use_pallas))
+    return sigma, rgb
+
+
+# ---------------------------------------------------------------------------
+# CullPlan: host-precomputed compaction for FIXED rays.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CullPlan:
+    """Per-chunk precomputed compaction of active samples.
+
+    For C chunks of R rays x S samples (P = R*S flattened samples):
+      buf_pts  (C, B, 3) f32 — the active sample points, compacted, in
+                               [0,1]^3 (deterministic eval sampling is
+                               policy- and params-independent, so the
+                               culled field-query INPUTS are fixed too);
+      buf_dirs (C, B, 3) f32 — matching ray directions;
+      take     (C, P) int32  — buffer slot holding sample k's result;
+      valid    (C, P) bool   — sample k survives culling.
+    B is EXACT (max active count over chunks, 128-aligned): the active
+    mask depends only on ray geometry and the frozen occupancy grid.
+
+    Everything else geometry-static is baked too, so the fused hot path
+    starts at the table gathers / MLP matmuls:
+      hash_idx (C, L, B, 8) int32 — per-level voxel-corner table rows;
+      hash_w   (C, L, B, 8) f32   — matching trilinear weights;
+      sh       (C, B, sh_dim) f32 — spherical-harmonic view basis.
+    """
+
+    buf_pts: jnp.ndarray
+    buf_dirs: jnp.ndarray
+    take: jnp.ndarray
+    valid: jnp.ndarray
+    hash_idx: jnp.ndarray
+    hash_w: jnp.ndarray
+    sh: jnp.ndarray
+
+    @property
+    def budget(self) -> int:
+        return self.buf_pts.shape[-2]
+
+
+jax.tree_util.register_dataclass(
+    CullPlan,
+    data_fields=[
+        "buf_pts", "buf_dirs", "take", "valid", "hash_idx", "hash_w", "sh"
+    ],
+    meta_fields=[],
+)
+
+
+def build_cull_plan(
+    occ: OccupancyGrid,
+    ro_chunks: np.ndarray,  # (C, R, 3) rays, padded rows allowed
+    rd_chunks: np.ndarray,  # (C, R, 3)
+    ray_mask: Optional[np.ndarray],  # (C, R, 1) 1.0 = real ray, or None
+    rcfg,  # RenderConfig (deterministic sampling assumed)
+    cfg: NGPConfig,
+    align: int = 128,
+) -> CullPlan:
+    """Precompute the compaction for a fixed, chunked ray population."""
+    ro = np.asarray(ro_chunks, np.float32)
+    rd = np.asarray(rd_chunks, np.float32)
+    C, R = ro.shape[:2]
+    S = rcfg.n_samples
+    # Shared oracle with `cull_budget` — the counts must match exactly.
+    active, pts = sample_active_mask(occ, ro, rd, rcfg)  # (C, R, S)
+    if ray_mask is not None:
+        active &= np.asarray(ray_mask).reshape(C, R, 1) > 0.5
+    active = active.reshape(C, R * S)
+
+    counts = active.sum(axis=1)
+    B = max(align, int(np.ceil(counts.max() / align) * align))
+    B = min(B, R * S)
+    pts_unit = np.clip(pts + 0.5, 0.0, 1.0).reshape(C, R * S, 3)
+    dirs_flat = np.broadcast_to(rd[:, :, None, :], pts.shape).reshape(C, R * S, 3)
+    buf_pts = np.zeros((C, B, 3), np.float32)
+    buf_dirs = np.zeros((C, B, 3), np.float32)
+    take = np.zeros((C, R * S), np.int32)
+    valid = np.zeros((C, R * S), bool)
+    for c in range(C):
+        idx = np.nonzero(active[c])[0]
+        buf_pts[c, : idx.size] = pts_unit[c, idx]
+        buf_dirs[c, : idx.size] = dirs_flat[c, idx]
+        take[c, idx] = np.arange(idx.size, dtype=np.int32)
+        valid[c, idx] = True
+
+    # Bake the remaining geometry-only field-query work (one-time host
+    # loop; jitted helpers keep the bake itself fast).
+    L = cfg.hash.n_levels
+    hash_idx = np.zeros((C, L, B, 8), np.int32)
+    hash_w = np.zeros((C, L, B, 8), np.float32)
+    sh = np.zeros((C, B, cfg.sh_dim), np.float32)
+    corner_fn = jax.jit(
+        lambda p: tuple(
+            level_corner_data(p, l, cfg.hash) for l in range(L)
+        )
+    )
+    sh_fn = jax.jit(lambda d: sh_encode(d, cfg.sh_degree))
+    for c in range(C):
+        for l, (ci, cw) in enumerate(corner_fn(jnp.asarray(buf_pts[c]))):
+            hash_idx[c, l] = np.asarray(ci)
+            hash_w[c, l] = np.asarray(cw)
+        sh[c] = np.asarray(sh_fn(jnp.asarray(buf_dirs[c])))
+    return CullPlan(
+        buf_pts=jnp.asarray(buf_pts), buf_dirs=jnp.asarray(buf_dirs),
+        take=jnp.asarray(take), valid=jnp.asarray(valid),
+        hash_idx=jnp.asarray(hash_idx), hash_w=jnp.asarray(hash_w),
+        sh=jnp.asarray(sh),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Occupancy-culled ray rendering (one chunk).
+# ---------------------------------------------------------------------------
+def _chunk_color(
+    params, pack, spec, occ, rays_o, rays_d,
+    cfg, rcfg, mode, budget, use_pallas, early_stop,
+    key=None, plan_row=None,
+):
+    """Core renderer for one chunk of rays. Returns (color (R,3), acc (R,1))."""
+    n_rays = rays_o.shape[0]
+    n_s = rcfg.n_samples
+    t = jnp.linspace(rcfg.near, rcfg.far, n_s)
+    t = jnp.broadcast_to(t, (n_rays, n_s))
+    if rcfg.stratified and key is not None:
+        dt = (rcfg.far - rcfg.near) / n_s
+        t = t + jax.random.uniform(key, t.shape) * dt
+
+    def field(p, d, corner_data=None, sh=None):
+        if mode == "fused":
+            return fused_ngp_apply(
+                pack, p, d, cfg, use_pallas=use_pallas,
+                corner_data=corner_data, sh=sh,
+            )
+        return ngp_apply(params, p, d, cfg, spec)
+
+    if plan_row is not None:
+        # Precomputed compaction: the culled field-query inputs (and their
+        # hash-corner / SH bases) are staged in the plan — the hot path
+        # starts at the table gathers and MLP matmuls.
+        buf_pts, buf_dirs, take, valid, hash_idx, hash_w, sh = plan_row
+        sigma_b, rgb_b = field(
+            buf_pts, buf_dirs, corner_data=(hash_idx, hash_w), sh=sh
+        )
+        sigma = jnp.where(valid, sigma_b[take], 0.0).reshape(n_rays, n_s)
+        rgb = jnp.where(valid[:, None], rgb_b[take], 0.0).reshape(n_rays, n_s, 3)
+    else:
+        pts = rays_o[:, None, :] + rays_d[:, None, :] * t[..., None]  # (R, S, 3)
+        pts_unit = jnp.clip(pts + 0.5, 0.0, 1.0)  # [-0.5,0.5] -> [0,1]
+        inside = jnp.all((pts > -0.5) & (pts < 0.5), axis=-1)  # (R, S)
+        flat_pts = pts_unit.reshape(-1, 3)
+        flat_dirs = jnp.broadcast_to(rays_d[:, None, :], pts.shape).reshape(-1, 3)
+        P = n_rays * n_s
+        if occ is None:
+            sigma, rgb = field(flat_pts, flat_dirs)
+            sigma = jnp.where(inside, sigma.reshape(n_rays, n_s), 0.0)
+            rgb = rgb.reshape(n_rays, n_s, 3)
+        else:
+            # Ad-hoc rays: on-device stable compaction (cumsum + scatter).
+            active = inside.reshape(-1) & occupancy_lookup(occ, flat_pts)
+            B = P if budget is None else min(int(budget), P)
+            rank = jnp.cumsum(active) - 1  # (P,) int
+            valid = active & (rank < B)  # budget overflow drops samples
+            pos = jnp.where(valid, rank, B)  # B = out of range -> dropped
+            buf_pts = jnp.zeros((B, 3)).at[pos].set(flat_pts, mode="drop")
+            buf_dirs = jnp.zeros((B, 3)).at[pos].set(flat_dirs, mode="drop")
+            sigma_b, rgb_b = field(buf_pts, buf_dirs)
+            take = jnp.clip(rank, 0, B - 1)
+            sigma = jnp.where(valid, sigma_b[take], 0.0).reshape(n_rays, n_s)
+            rgb = jnp.where(valid[:, None], rgb_b[take], 0.0).reshape(n_rays, n_s, 3)
+
+    delta = jnp.diff(t, axis=-1)
+    delta = jnp.concatenate([delta, jnp.full_like(delta[..., :1], 1e10)], axis=-1)
+    color, acc = ops_alpha_composite(
+        sigma, rgb, delta, use_pallas=use_pallas, early_stop=early_stop
+    )
+    if rcfg.white_bg:
+        color = color + (1.0 - acc)
+    return color, acc
+
+
+def fast_render_rays(
+    params: Dict,
+    rays_o: jnp.ndarray,  # (R, 3)
+    rays_d: jnp.ndarray,  # (R, 3) unit
+    cfg: NGPConfig,
+    rcfg,  # RenderConfig
+    spec: Optional[NGPQuantSpec] = None,
+    occ: Optional[OccupancyGrid] = None,
+    mode: str = "reference",
+    pack: Optional[FusedPack] = None,
+    budget: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    use_pallas="auto",
+    early_stop: bool = True,
+    plan: Optional[CullPlan] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Occupancy-culled render of one ray batch -> (color (R,3), acc (R,1)).
+
+    `mode="reference"` queries the fake-quant `ngp_apply` oracle;
+    `mode="fused"` queries the integer `FusedPack` path (built from
+    (params, spec) on the fly when `pack` is not given — pass a prebuilt
+    pack inside jit/vmap, where spec bits are not concrete). A
+    single-chunk `plan` (see `build_cull_plan`) replaces the on-device
+    compaction with precomputed gathers.
+    """
+    assert mode in ("reference", "fused"), mode
+    if mode == "fused" and pack is None:
+        pack = build_fused_pack(params, cfg, spec)
+    plan_row = None
+    if plan is not None:
+        assert plan.buf_pts.shape[0] == 1, "fast_render_rays takes a 1-chunk plan"
+        plan_row = (
+            plan.buf_pts[0], plan.buf_dirs[0], plan.take[0], plan.valid[0],
+            plan.hash_idx[0], plan.hash_w[0], plan.sh[0],
+        )
+    return _chunk_color(
+        params, pack, spec, occ, rays_o, rays_d,
+        cfg, rcfg, mode, budget, use_pallas, early_stop, key, plan_row,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device-resident full-frame paths.
+# ---------------------------------------------------------------------------
+def _effective_chunk(n_rays: int, chunk: int) -> int:
+    return min(chunk, -(-n_rays // 128) * 128)
+
+
+def _pad_frame(rays_o, rays_d, gt, chunk: int):
+    """-> (ro (C,chunk,3), rd, gt, mask (C,chunk,1)) host-side prep."""
+    n = rays_o.shape[0]
+    c = _effective_chunk(n, chunk)
+    n_chunks = -(-n // c)
+    pad = n_chunks * c - n
+    def _p(a):
+        return jnp.asarray(
+            np.pad(np.asarray(a, np.float32), ((0, pad), (0, 0)))
+        ).reshape(n_chunks, c, -1)
+    mask = np.zeros((n_chunks * c, 1), np.float32)
+    mask[:n] = 1.0
+    return _p(rays_o), _p(rays_d), _p(gt), jnp.asarray(mask).reshape(n_chunks, c, 1)
+
+
+# Device-staged held-out test sets (and their cull plans), keyed by array
+# identity. The HERO loop evaluates the SAME views once per episode:
+# staging once keeps every later evaluation a single jit dispatch with no
+# host->device ray copies and no per-episode plan rebuilds. Cached entries
+# pin their source arrays so ids cannot be recycled; both caches are
+# bounded (oldest-out) so sweeps over many scenes/seeds cannot accumulate
+# staged test sets without limit.
+_TEST_STAGE_CACHE: Dict[Tuple, Tuple] = {}
+_PLAN_CACHE: Dict[Tuple, Tuple] = {}
+_CACHE_CAP = 8
+
+
+def _cache_put(cache: Dict, key, value) -> None:
+    if key not in cache and len(cache) >= _CACHE_CAP:
+        cache.pop(next(iter(cache)))  # dicts iterate in insertion order
+    cache[key] = value
+
+
+def _stage_test_set(dataset, chunk: int):
+    key = (id(dataset.test_rays_o), chunk)
+    hit = _TEST_STAGE_CACHE.get(key)
+    if hit is not None and hit[0] is dataset.test_rays_o:
+        return hit[1]
+    # Views are independent rays: stage them FLAT so a small test set
+    # becomes a single chunk (one field query per evaluation) while big
+    # ones still chunk to bound memory.
+    ro, rd, g, m = _pad_frame(
+        dataset.test_rays_o.reshape(-1, 3), dataset.test_rays_d.reshape(-1, 3),
+        dataset.test_rgb.reshape(-1, 3), chunk,
+    )
+    staged = (ro, rd, g, m, int(dataset.test_rgb.size))
+    _cache_put(_TEST_STAGE_CACHE, key, (dataset.test_rays_o, staged))
+    return staged
+
+
+def _test_set_plan(
+    dataset, occ: OccupancyGrid, rcfg, chunk: int, cfg: NGPConfig
+) -> CullPlan:
+    key = (id(dataset.test_rays_o), id(occ.occ), rcfg, chunk, cfg)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0] is dataset.test_rays_o and hit[1] is occ.occ:
+        return hit[2]
+    ro, rd, _, mask, _ = _stage_test_set(dataset, chunk)
+    plan = build_cull_plan(
+        occ, np.asarray(ro), np.asarray(rd), np.asarray(mask), rcfg, cfg
+    )
+    _cache_put(_PLAN_CACHE, key, (dataset.test_rays_o, occ.occ, plan))
+    return plan
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rcfg", "mode", "budget", "use_pallas", "early_stop"),
+)
+def _frame_se_impl(
+    params, pack, spec, occ, plan, rays_o, rays_d, gt, mask,
+    *, cfg, rcfg, mode, budget, use_pallas, early_stop,
+):
+    def body(xs):
+        (ro, rd, g, m), plan_row = xs[:4], (xs[4:] or None)
+        color, _ = _chunk_color(
+            params, pack, spec, occ, ro, rd,
+            cfg, rcfg, mode, budget, use_pallas, early_stop,
+            plan_row=plan_row,
+        )
+        return jnp.sum(((color - g) ** 2) * m)
+    xs = (rays_o, rays_d, gt, mask)
+    if plan is not None:
+        xs = xs + (plan.buf_pts, plan.buf_dirs, plan.take, plan.valid,
+                   plan.hash_idx, plan.hash_w, plan.sh)
+    return jnp.sum(jax.lax.map(body, xs))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rcfg", "mode", "budget", "use_pallas", "early_stop"),
+)
+def _frame_colors_impl(
+    params, pack, spec, occ, rays_o, rays_d,
+    *, cfg, rcfg, mode, budget, use_pallas, early_stop,
+):
+    # Image rendering takes arbitrary rays (no precomputed plan): the
+    # dynamic compaction path under `budget` applies per chunk.
+    def body(xs):
+        ro, rd = xs
+        color, _ = _chunk_color(
+            params, pack, spec, occ, ro, rd,
+            cfg, rcfg, mode, budget, use_pallas, early_stop,
+        )
+        return color
+    return jax.lax.map(body, (rays_o, rays_d))
+
+
+class FastRenderEngine:
+    """Bundles (params, spec, occupancy, mode) into jit-backed frame calls.
+
+    Build one per (params, policy) pair — construction is cheap (the
+    FusedPack quantizes five small matrices and the hash tables); the
+    underlying jitted functions, staged test sets, and cull plans are
+    shared across engines with the same static configuration, so
+    per-episode engines neither retrace nor restage.
+    """
+
+    def __init__(
+        self,
+        params: Dict,
+        cfg: NGPConfig,
+        rcfg,
+        spec: Optional[NGPQuantSpec] = None,
+        occ: Optional[OccupancyGrid] = None,
+        mode: str = "fused",
+        chunk: int = 4096,
+        budget: Optional[int] = None,
+        use_pallas="auto",
+        early_stop: bool = True,
+    ):
+        assert mode in ("reference", "fused"), mode
+        self.params = params
+        self.cfg = cfg
+        self.rcfg = dataclasses.replace(rcfg, stratified=False)
+        self.spec = no_quant_spec(cfg) if spec is None else spec
+        self.occ = occ
+        self.mode = mode
+        self.chunk = chunk
+        self.use_pallas = use_pallas
+        self.early_stop = early_stop
+        self.pack = (
+            build_fused_pack(params, cfg, self.spec) if mode == "fused" else None
+        )
+        self._budget = budget
+        self._budget_cache: Dict[Tuple, int] = {}
+
+    def _resolve_budget(self, rays_o, rays_d) -> Optional[int]:
+        """Per-chunk sample budget for the DYNAMIC compaction path:
+        explicit > cached-per-ray-content > derived from the rays.
+
+        Keyed by a content fingerprint, NOT object identity: callers
+        naturally pass fresh slice views (`dataset.test_rays_o[v]`), so
+        ids never repeat, while same-sized but different ray populations
+        must not reuse each other's budgets. The render call materializes
+        the rays on host anyway, so the hash is marginal."""
+        if self.occ is None:
+            return None
+        if self._budget is not None:
+            return self._budget
+        ro = np.asarray(rays_o, np.float32).reshape(-1, 3)
+        rd = np.asarray(rays_d, np.float32).reshape(-1, 3)
+        key = (ro.shape[0], hash(ro.tobytes()), hash(rd.tobytes()))
+        hit = self._budget_cache.get(key)
+        if hit is not None:
+            return hit
+        c = _effective_chunk(ro.shape[0], self.chunk)
+        budget = cull_budget(self.occ, ro, rd, self.rcfg, c)
+        _cache_put(self._budget_cache, key, budget)
+        return budget
+
+    def render_rays(self, rays_o, rays_d) -> jnp.ndarray:
+        """One-chunk render -> color (R, 3) on device."""
+        color, _ = fast_render_rays(
+            self.params, jnp.asarray(rays_o), jnp.asarray(rays_d),
+            self.cfg, self.rcfg, self.spec, self.occ, self.mode, self.pack,
+            self._resolve_budget(rays_o, rays_d),
+            use_pallas=self.use_pallas, early_stop=self.early_stop,
+        )
+        return color
+
+    def frame_se(self, rays_o, rays_d, gt, budget: Optional[int] = None) -> jnp.ndarray:
+        """Masked squared error of a full frame — ONE device scalar."""
+        if budget is None:
+            budget = self._resolve_budget(rays_o, rays_d)
+        ro, rd, g, m = _pad_frame(rays_o, rays_d, gt, self.chunk)
+        return _frame_se_impl(
+            self.params, self.pack, self.spec, self.occ, None, ro, rd, g, m,
+            cfg=self.cfg, rcfg=self.rcfg, mode=self.mode, budget=budget,
+            use_pallas=self.use_pallas, early_stop=self.early_stop,
+        )
+
+    def render_frame(self, rays_o, rays_d) -> jnp.ndarray:
+        """Full frame -> (N, 3) colors, device-resident `lax.map` loop."""
+        n = rays_o.shape[0]
+        budget = self._resolve_budget(rays_o, rays_d)
+        gt0 = np.zeros((n, 3), np.float32)  # only for shared padding helper
+        ro, rd, _, _ = _pad_frame(rays_o, rays_d, gt0, self.chunk)
+        colors = _frame_colors_impl(
+            self.params, self.pack, self.spec, self.occ, ro, rd,
+            cfg=self.cfg, rcfg=self.rcfg, mode=self.mode, budget=budget,
+            use_pallas=self.use_pallas, early_stop=self.early_stop,
+        )
+        return colors.reshape(-1, 3)[:n]
+
+    def test_views_budget(self, dataset) -> Optional[int]:
+        """The exact per-chunk budget the staged test set renders under
+        (the cull plan's B), None without an occupancy grid."""
+        if self.occ is None:
+            return None
+        return _test_set_plan(
+            dataset, self.occ, self.rcfg, self.chunk, self.cfg
+        ).budget
+
+    def evaluate_psnr(self, dataset) -> float:
+        """Mean PSNR over held-out views.
+
+        The test set (and its cull plan) is staged on device once and the
+        whole evaluation — every view's chunks plus the squared-error
+        reduction — is ONE jitted call returning ONE scalar. Per-view SE
+        remains available through `frame_se`. An explicit engine `budget`
+        overrides the plan: the dynamic compaction renders under that cap
+        instead (the caller is bounding memory/compute on purpose).
+        """
+        ro, rd, gt, mask, total_px = _stage_test_set(dataset, self.chunk)
+        plan, budget = None, None
+        if self.occ is not None:
+            if self._budget is not None:
+                budget = self._budget
+            else:
+                plan = _test_set_plan(
+                    dataset, self.occ, self.rcfg, self.chunk, self.cfg
+                )
+        se = _frame_se_impl(
+            self.params, self.pack, self.spec, self.occ, plan, ro, rd, gt, mask,
+            cfg=self.cfg, rcfg=self.rcfg, mode=self.mode, budget=budget,
+            use_pallas=self.use_pallas, early_stop=self.early_stop,
+        )
+        from repro.nerf.train import psnr  # lazy: train imports us lazily too
+
+        return psnr(float(se) / total_px)

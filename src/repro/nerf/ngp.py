@@ -231,12 +231,13 @@ def sh_encode(dirs: jnp.ndarray, degree: int) -> jnp.ndarray:
     Hard-coded closed forms up to degree 4 (the Instant-NGP default).
     """
     x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    if degree >= 2:  # shared monomials for the whole degree ladder
+        xx, yy, zz = x * x, y * y, z * z
+        xy, yz, xz = x * y, y * z, x * z
     out = [jnp.full_like(x, 0.28209479177387814)]
     if degree >= 1:
         out += [-0.48860251190291987 * y, 0.48860251190291987 * z, -0.48860251190291987 * x]
     if degree >= 2:
-        xx, yy, zz = x * x, y * y, z * z
-        xy, yz, xz = x * y, y * z, x * z
         out += [
             1.0925484305920792 * xy,
             -1.0925484305920792 * yz,
@@ -245,7 +246,6 @@ def sh_encode(dirs: jnp.ndarray, degree: int) -> jnp.ndarray:
             0.54627421529603959 * (xx - yy),
         ]
     if degree >= 3:
-        xx, yy, zz = x * x, y * y, z * z
         out += [
             0.59004358992664352 * y * (-3.0 * xx + yy),
             2.8906114426405538 * x * y * z,
@@ -256,8 +256,6 @@ def sh_encode(dirs: jnp.ndarray, degree: int) -> jnp.ndarray:
             0.59004358992664352 * x * (-xx + 3.0 * yy),
         ]
     if degree >= 4:
-        xx, yy, zz = x * x, y * y, z * z
-        xy, yz, xz = x * y, y * z, x * z
         out += [
             2.5033429417967046 * xy * (xx - yy),
             1.7701307697799304 * yz * (-3.0 * xx + yy),

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.nerf.dataset import NGPDataset
-from repro.nerf.ngp import NGPConfig, NGPQuantSpec, init_ngp, ngp_apply, no_quant_spec
+from repro.nerf.ngp import NGPConfig, NGPQuantSpec, init_ngp, no_quant_spec
 from repro.nerf.render import RenderConfig, render_rays
 from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
 
@@ -124,14 +124,6 @@ def finetune_ngp(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "rcfg"))
-def _render_chunk(params, rays_o, rays_d, spec, cfg, rcfg):
-    # Deterministic (non-stratified) sampling for evaluation.
-    eval_rcfg = dataclasses.replace(rcfg, stratified=False)
-    color, _ = render_rays(params, rays_o, rays_d, cfg, eval_rcfg, spec, None)
-    return color
-
-
 def evaluate_psnr(
     params: Dict,
     dataset: NGPDataset,
@@ -139,33 +131,26 @@ def evaluate_psnr(
     rcfg: RenderConfig,
     spec: Optional[NGPQuantSpec] = None,
     chunk: int = 4096,
+    occ=None,
+    mode: str = "reference",
+    budget: Optional[int] = None,
 ) -> float:
-    """Mean PSNR over held-out test views."""
-    if spec is None:
-        spec = no_quant_spec(cfg)
-    total_se, total_px = 0.0, 0
-    for v in range(dataset.test_rays_o.shape[0]):
-        ro = dataset.test_rays_o[v]
-        rd = dataset.test_rays_d[v]
-        gt = dataset.test_rgb[v]
-        preds = []
-        for s in range(0, ro.shape[0], chunk):
-            preds.append(
-                np.asarray(
-                    _render_chunk(
-                        params,
-                        jnp.asarray(ro[s : s + chunk]),
-                        jnp.asarray(rd[s : s + chunk]),
-                        spec,
-                        cfg,
-                        rcfg,
-                    )
-                )
-            )
-        pred = np.concatenate(preds)
-        total_se += float(((pred - gt) ** 2).sum())
-        total_px += gt.size
-    return psnr(total_se / total_px)
+    """Mean PSNR over held-out test views.
+
+    Frames are rendered device-resident (`lax.map` over ray chunks with
+    on-device squared-error accumulation) — one scalar crosses to the host
+    per view regardless of mode. `mode="reference"` renders through the
+    fake-quant oracle; `mode="fused"` through the integer kernel path,
+    with empty-space culling when an `OccupancyGrid` is passed as `occ`
+    (see `repro.nerf.fast_render`).
+    """
+    from repro.nerf.fast_render import FastRenderEngine
+
+    engine = FastRenderEngine(
+        params, cfg, rcfg, spec=spec, occ=occ, mode=mode, chunk=chunk,
+        budget=budget,
+    )
+    return engine.evaluate_psnr(dataset)
 
 
 def render_test_view(
@@ -176,26 +161,18 @@ def render_test_view(
     view: int = 0,
     spec: Optional[NGPQuantSpec] = None,
     chunk: int = 4096,
+    occ=None,
+    mode: str = "reference",
 ) -> np.ndarray:
     """Render one held-out view to an (hw, hw, 3) image (for Fig. 5-style
     qualitative comparisons)."""
-    if spec is None:
-        spec = no_quant_spec(cfg)
-    ro = dataset.test_rays_o[view]
-    rd = dataset.test_rays_d[view]
-    preds = []
-    for s in range(0, ro.shape[0], chunk):
-        preds.append(
-            np.asarray(
-                _render_chunk(
-                    params,
-                    jnp.asarray(ro[s : s + chunk]),
-                    jnp.asarray(rd[s : s + chunk]),
-                    spec,
-                    cfg,
-                    rcfg,
-                )
-            )
-        )
+    from repro.nerf.fast_render import FastRenderEngine
+
+    engine = FastRenderEngine(
+        params, cfg, rcfg, spec=spec, occ=occ, mode=mode, chunk=chunk
+    )
+    colors = engine.render_frame(
+        dataset.test_rays_o[view], dataset.test_rays_d[view]
+    )
     hw = dataset.cfg.image_hw
-    return np.concatenate(preds).reshape(hw, hw, 3)
+    return np.asarray(colors).reshape(hw, hw, 3)
