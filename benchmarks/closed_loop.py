@@ -1,0 +1,117 @@
+"""Closed-loop search benchmark: policies/sec, frontier hypervolume, and
+wall-clock to beat a CAQ-style uniform fixed-bit configuration.
+
+Runs `HeroSearchRun` over a scene x budget grid and writes
+``BENCH_search.json`` (schema: `repro.core.closed_loop.bench_report`).
+With `--check-baseline`, fails (exit 1) when policies/sec drops more than
+`--max-drop` below the committed baseline — the CI regression gate. The
+JSON is written BEFORE the gate fires so a failing run still uploads its
+numbers.
+
+Usage (repo root on the path for `benchmarks.*`):
+  PYTHONPATH=src:. python benchmarks/closed_loop.py --quick
+  PYTHONPATH=src:. python benchmarks/closed_loop.py --quick \
+      --check-baseline benchmarks/BENCH_search_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.core.closed_loop import (
+    ClosedLoopConfig,
+    HeroSearchRun,
+    SceneScale,
+    bench_report,
+)
+
+
+def run_quick(scenes, budgets, seed: int = 0, verbose: bool = True):
+    cfg = ClosedLoopConfig(
+        scenes=tuple(scenes),
+        budget_fracs=tuple(budgets),
+        seed=seed,
+        scale=SceneScale.quick(),
+        n_iterations=3,
+        population=8,
+        verbose=verbose,
+    )
+    return HeroSearchRun(cfg).run(), cfg
+
+
+def run_standard(scenes, budgets, seed: int = 0, verbose: bool = True):
+    cfg = ClosedLoopConfig(
+        scenes=tuple(scenes),
+        budget_fracs=tuple(budgets),
+        seed=seed,
+        scale=SceneScale.standard(),
+        n_iterations=8,
+        population=16,
+        verbose=verbose,
+    )
+    return HeroSearchRun(cfg).run(), cfg
+
+
+def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
+    """True when policies/sec is within `max_drop` of the baseline.
+
+    The metric is machine-dependent: the committed baseline must come
+    from hardware comparable to where the gate runs (refresh it from the
+    CI artifact if the gate trips without a perf-relevant change)."""
+    base = json.loads(Path(baseline_path).read_text())
+    want = float(base["policies_per_sec"])
+    got = float(report["policies_per_sec"])
+    floor = want * (1.0 - max_drop)
+    ok = got >= floor
+    print(f"[bench-search] regression gate: {got:.2f} policies/s vs "
+          f"baseline {want:.2f} (floor {floor:.2f}, max drop "
+          f"{max_drop:.0%}) -> {'OK' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--scenes", default="chair,lego")
+    ap.add_argument("--budgets", default="1.0,0.85")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_search.json")
+    ap.add_argument("--check-baseline", default=None,
+                    help="baseline BENCH_search.json to gate against")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional policies/sec drop vs baseline")
+    args = ap.parse_args(argv)
+
+    scenes = [s for s in args.scenes.split(",") if s]
+    budgets = [float(b) for b in args.budgets.split(",") if b]
+    runner = run_quick if args.quick else run_standard
+    result, cfg = runner(scenes, budgets, seed=args.seed)
+
+    report = bench_report(result, cfg)
+    Path(args.out).write_text(json.dumps(report, indent=2))
+
+    print(f"\n== closed-loop search ({'quick' if args.quick else 'standard'}"
+          f" scale, {len(scenes)} scenes x {len(budgets)} budgets) ==")
+    print(f"  policies evaluated:  {report['policies_evaluated']}")
+    print(f"  policies/sec:        {report['policies_per_sec']:.2f}")
+    print(f"  frontier size:       {report['frontier_size']} "
+          f"(HV {report['frontier_hypervolume']:.4f})")
+    print(f"  sec to fixed-{report['fixed_bit_reference']}bit:   "
+          f"{report['seconds_to_fixed_bit']}")
+    print(f"  wrote {args.out}")
+
+    if not (report["frontier_valid_vs_8bit"] and report["frontier_size"] > 0):
+        print("[bench-search] FRONTIER INVALID vs fixed-8-bit baseline",
+              file=sys.stderr)
+        return 1
+    if args.check_baseline and not check_baseline(
+        report, args.check_baseline, args.max_drop
+    ):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -117,7 +117,7 @@ def run_scene_level(
     # lower-or-equal cost); MGL = 85% of it (resource constrained).
     ptq = ptq_baseline(env, uniform_bits)
     target = ptq.latency_cycles * (1.0 if level == "MDL" else 0.85)
-    env.ecfg = dataclasses.replace(env.ecfg, latency_target=target)
+    env.set_latency_target(target)
 
     qat = qat_baseline(env, uniform_bits)
     caq = caq_proxy_baseline(

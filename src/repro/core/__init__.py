@@ -8,6 +8,11 @@
 - batched_env: population evaluation — K policies per step through the
              vmapped simulator + vmapped PSNR proxy
 - search:    the episodic HERO search loop + population mode (CEM + DDPG)
+- pareto:    constraint sets + dominated-policy pruning + frontier tracking
+             (latency / PSNR / model size) with exact hypervolume
+- closed_loop: HeroSearchRun — the multi-scene x multi-budget closed loop
+             (shared scene bundles, sharded population scoring, cell-
+             granular checkpoint/resume of the frontier)
 - baselines: PTQ / QAT / CAQ-proxy comparison methods
 - lm_env:    the same technique applied to the assigned LM architectures,
              with a TPU roofline cost model as hardware feedback
@@ -35,6 +40,20 @@ from repro.core.baselines import (
     caq_proxy_baseline,
     BaselineResult,
 )
+from repro.core.pareto import (
+    ConstraintSet,
+    ParetoFrontier,
+    ParetoPoint,
+    pareto_filter,
+)
+from repro.core.closed_loop import (
+    ClosedLoopConfig,
+    ClosedLoopResult,
+    HeroSearchRun,
+    SceneBundle,
+    SceneScale,
+    build_scene_bundle,
+)
 
 __all__ = [
     "action_to_bits",
@@ -60,4 +79,14 @@ __all__ = [
     "qat_baseline",
     "caq_proxy_baseline",
     "BaselineResult",
+    "ConstraintSet",
+    "ParetoFrontier",
+    "ParetoPoint",
+    "pareto_filter",
+    "ClosedLoopConfig",
+    "ClosedLoopResult",
+    "HeroSearchRun",
+    "SceneBundle",
+    "SceneScale",
+    "build_scene_bundle",
 ]

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.env import NGPQuantEnv
 from repro.core.reward import hero_reward
-from repro.hwsim.batched import BatchedNeuRexSimulator
+from repro.hwsim.batched import BatchedNeuRexSimulator, policy_latency
 from repro.nerf.fast_render import build_cull_plan, fast_render_rays
 from repro.nerf.ngp import NGPQuantSpec
 from repro.nerf.train import finetune_ngp
@@ -64,6 +64,9 @@ class PopulationEval:
     reward: np.ndarray
     fqr: np.ndarray
     wall_seconds: float
+    # Latency-budget feasibility (latency <= the target passed to
+    # `evaluate_population`); None when no target was given.
+    feasible: Optional[np.ndarray] = None
 
     @property
     def k(self) -> int:
@@ -85,7 +88,17 @@ class BatchedQuantEnv:
     baseline, so scalar and batched rewards live on the same cost scale.
     """
 
-    def __init__(self, env: NGPQuantEnv, bcfg: BatchedEnvConfig = BatchedEnvConfig()):
+    def __init__(
+        self,
+        env: NGPQuantEnv,
+        bcfg: BatchedEnvConfig = BatchedEnvConfig(),
+        sharded: Optional[bool] = None,
+    ):
+        """`sharded=None` auto-enables device-parallel population scoring
+        when the host exposes more than one jax device (K policies split
+        over a ("pop",) mesh, see repro.distributed.population); True/False
+        force it. Sharded and single-device paths produce identical metrics
+        (integer-exact cache stats either way)."""
         self.env = env
         self.bcfg = bcfg
         cfg = env.cfg
@@ -143,9 +156,36 @@ class BatchedQuantEnv:
             )
             return jnp.mean((color - self._proxy_rays[2]) ** 2)
 
-        self._mse_batch = jax.jit(
-            jax.vmap(_proxy_mse, in_axes=(None, 0, 0, 0))
-        )
+        # --- single-device vs device-sharded evaluation --------------------
+        from repro.distributed.population import auto_shard, shard_population
+
+        tc = self.bsim.tc
+        self.sharded = auto_shard() if sharded is None else bool(sharded)
+        if self.sharded and not tc.jax_addr_safe:
+            # The on-device fused path would wrap int32 addresses; the
+            # memoized host kernel (int64) is the only exact option.
+            self.sharded = False
+        if self.sharded:
+            self._mse_batch = shard_population(
+                jax.vmap(_proxy_mse, in_axes=(None, 0, 0, 0)),
+                broadcast_argnums=(0,),
+            )
+            # Fully fused latency model (grid-cache sort on device) so the
+            # whole per-policy evaluation lives on its shard; numbers match
+            # the memoized host path (integer-exact stats, f32 compose).
+            sim_cfg, overlap = env.sim.cfg, env.sim.pipeline_overlap
+            self._lat_sharded = shard_population(
+                jax.vmap(
+                    lambda hb, wb, ab: policy_latency(
+                        hb, wb, ab, tc, sim_cfg, overlap
+                    )
+                ),
+            )
+        else:
+            self._mse_batch = jax.jit(
+                jax.vmap(_proxy_mse, in_axes=(None, 0, 0, 0))
+            )
+            self._lat_sharded = None
 
         # Proxy-consistent Eq. 8 baseline: 8-bit PSNR through the SAME proxy
         # (no finetune) so psnr - psnr_org compares like with like.
@@ -182,13 +222,28 @@ class BatchedQuantEnv:
         return -10.0 * np.log10(mse)
 
     def simulate_batch(self, bits_batch: np.ndarray) -> Dict[str, np.ndarray]:
-        """Latency/size metrics only ((K,) arrays), no rendering."""
+        """Latency/size metrics only ((K,) arrays), no rendering. Routes
+        through the device-sharded fused model when sharding is on."""
         hb, wb, ab = self.bits_to_arrays(bits_batch)
+        if self._lat_sharded is not None:
+            out = self._lat_sharded(
+                jnp.asarray(hb), jnp.asarray(wb), jnp.asarray(ab)
+            )
+            return {k: np.asarray(v) for k, v in out.items()}
         return self.bsim.simulate_batch(hb, wb, ab)
 
     # ------------------------------------------------------------------
-    def evaluate_population(self, bits_batch: Sequence[Sequence[int]]) -> PopulationEval:
-        """Score K policies: vmapped simulator + vmapped PSNR proxy + Eq. 8."""
+    def evaluate_population(
+        self,
+        bits_batch: Sequence[Sequence[int]],
+        latency_target: Optional[float] = None,
+    ) -> PopulationEval:
+        """Score K policies: vmapped simulator + vmapped PSNR proxy + Eq. 8.
+
+        `latency_target` is per-call search state (the active hardware
+        budget): it does not change any metric, it only fills the
+        `feasible` mask so callers (frontier constraints, constrained
+        selection) can reuse one env across budgets."""
         t0 = time.time()
         bb = np.asarray(bits_batch, np.int32)
         env = self.env
@@ -239,4 +294,7 @@ class BatchedQuantEnv:
             reward=reward,
             fqr=bb.mean(axis=1).astype(np.float64),
             wall_seconds=time.time() - t0,
+            feasible=(
+                latency <= latency_target if latency_target is not None else None
+            ),
         )

@@ -36,7 +36,7 @@ from repro.nerf.ngp import (
     ngp_linear_names,
     spec_from_policy,
 )
-from repro.nerf.occupancy import bake_occupancy
+from repro.nerf.occupancy import bake_occupancy_cached
 from repro.nerf.render import RenderConfig
 from repro.nerf.train import TrainConfig, evaluate_psnr, finetune_ngp
 from repro.quant.policy import QuantPolicy, QuantUnit, UnitKind
@@ -108,9 +108,12 @@ class NGPQuantEnv:
         # Occupancy grid baked ONCE from the frozen pretrained geometry;
         # every episode PSNR render culls empty space against it (QAT
         # finetunes are short, so the geometry stays inside the dilated
-        # grid). `render_backend="reference"` keeps the dense oracle.
+        # grid). The bake goes through the content-addressed registry so
+        # several envs over the same scene (e.g. one per hardware budget
+        # in the closed-loop search) share one grid instead of re-baking.
+        # `render_backend="reference"` keeps the dense oracle.
         self.occ = (
-            bake_occupancy(
+            bake_occupancy_cached(
                 params, cfg, resolution=ecfg.occ_resolution,
                 threshold=ecfg.occ_threshold,
             )
@@ -243,11 +246,34 @@ class NGPQuantEnv:
     def n_units(self) -> int:
         return len(self.units)
 
+    @property
+    def scene_name(self) -> str:
+        """Scene identity of the workload this env scores (dataset-derived;
+        the closed-loop driver keys bundles and frontier tags on it)."""
+        return self.dataset.scene_name
+
+    def set_latency_target(self, target: Optional[float]) -> None:
+        """Swap the active hardware budget without rebuilding the env.
+
+        The budget is *search state*, not env identity: the trace,
+        calibration, baselines, and occupancy grid are all budget-
+        independent, so the closed loop re-points one env at many
+        budgets. Prefer passing `target=` per call where possible."""
+        self.ecfg = dataclasses.replace(self.ecfg, latency_target=target)
+
     # ------------------------------------------------------------------
     # Constraint enforcement (resource-constrained search)
     # ------------------------------------------------------------------
-    def enforce_latency_target(self, bits: List[int]) -> List[int]:
-        target = self.ecfg.latency_target
+    _UNSET = object()
+
+    def enforce_latency_target(
+        self, bits: List[int], target=_UNSET
+    ) -> List[int]:
+        """Greedy bit reduction until `target` cycles is met. `target`
+        defaults to the env-configured budget; pass it explicitly to score
+        the same env under several hardware budgets (closed-loop search)."""
+        if target is NGPQuantEnv._UNSET:
+            target = self.ecfg.latency_target
         if target is None:
             return bits
         bits = list(bits)

@@ -192,13 +192,21 @@ def hero_population_search(
     benv,  # BatchedQuantEnv (typed loosely to avoid an import cycle)
     scfg: PopulationSearchConfig = PopulationSearchConfig(),
     dcfg: Optional[DDPGConfig] = None,
+    latency_target: Optional[float] = None,
 ) -> PopulationSearchResult:
     """Population-based HERO: CEM over bit vectors + DDPG proposals, scored
-    K-at-a-time through the vmapped simulator and PSNR proxy."""
+    K-at-a-time through the vmapped simulator and PSNR proxy.
+
+    `latency_target` overrides the env-configured budget for this search
+    only (None falls back to `env.ecfg.latency_target`): the closed-loop
+    driver runs the SAME env under several hardware budgets without
+    mutating it."""
     env = benv.env
     t_start = time.time()
     rng = np.random.RandomState(scfg.seed)
     agent = DDPGAgent(dcfg or DDPGConfig(seed=scfg.seed))
+    if latency_target is None:
+        latency_target = env.ecfg.latency_target
 
     b_min, b_max = env.ecfg.b_min, env.ecfg.b_max
     mean = np.full(env.n_units, 0.5 * (b_min + b_max))
@@ -219,11 +227,14 @@ def hero_population_search(
         for _ in range(scfg.population - n_agent):
             sample = np.clip(np.round(rng.normal(mean, std)), b_min, b_max)
             proposals.append([int(b) for b in sample])
-        if env.ecfg.latency_target is not None:
-            proposals = [env.enforce_latency_target(p) for p in proposals]
+        if latency_target is not None:
+            proposals = [
+                env.enforce_latency_target(p, target=latency_target)
+                for p in proposals
+            ]
 
         # --- score the whole population in one vmapped call --------------
-        ev = benv.evaluate_population(proposals)
+        ev = benv.evaluate_population(proposals, latency_target=latency_target)
         n_evaluated += ev.k
         elites = ev.topk(n_elite)
 

@@ -1,5 +1,5 @@
-"""Distribution substrate: sharding rules, HLO/roofline analysis,
-fault tolerance, gradient compression."""
+"""Distribution substrate: sharding rules, sharded population evaluation,
+HLO/roofline analysis, fault tolerance, gradient compression."""
 from repro.distributed.sharding import (
     ShardingConfig,
     param_pspecs,
@@ -8,6 +8,13 @@ from repro.distributed.sharding import (
     batch_axes,
     named,
     validate_divisibility,
+)
+from repro.distributed.population import (
+    POP_AXIS,
+    auto_shard,
+    pad_population,
+    population_mesh,
+    shard_population,
 )
 from repro.distributed.hlo_analysis import (
     ChipSpec,
@@ -26,6 +33,11 @@ __all__ = [
     "batch_axes",
     "named",
     "validate_divisibility",
+    "POP_AXIS",
+    "auto_shard",
+    "pad_population",
+    "population_mesh",
+    "shard_population",
     "ChipSpec",
     "CollectiveStats",
     "RooflineTerms",

@@ -105,6 +105,67 @@ def bake_occupancy(
     )
 
 
+# ---------------------------------------------------------------------------
+# Bake registry: one grid per (weights, config) — shared across env instances
+# ---------------------------------------------------------------------------
+# The closed-loop search instantiates several envs per scene (one per
+# hardware budget, plus batched wrappers); each bake is a dense host-side
+# sigma sweep, so re-baking per instantiation multiplies the dominant
+# setup cost for identical grids. The registry keys on a fingerprint of
+# the frozen pretrained weights plus every bake parameter, so two envs on
+# the same scene share ONE grid object while a finetuned/retrained model
+# (different weights) still gets its own bake.
+_BAKE_REGISTRY: Dict[tuple, OccupancyGrid] = {}
+_BAKE_REGISTRY_CAP = 64
+
+
+def params_fingerprint(params: Dict) -> str:
+    """Content hash of a parameter pytree (order-independent leaf paths)."""
+    import hashlib
+
+    h = hashlib.sha256()
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in sorted(leaves, key=lambda kv: str(kv[0])):
+        h.update(str(path).encode())
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()[:24]
+
+
+def clear_occupancy_registry() -> None:
+    _BAKE_REGISTRY.clear()
+
+
+def occupancy_registry_size() -> int:
+    return len(_BAKE_REGISTRY)
+
+
+def bake_occupancy_cached(
+    params: Dict,
+    cfg,  # NGPConfig
+    resolution: int = 32,
+    threshold: float = 1e-2,
+    supersample: int = 2,
+    dilate: int = 1,
+    chunk: int = 65536,
+) -> OccupancyGrid:
+    """`bake_occupancy` behind a content-addressed registry: identical
+    (weights, config, bake knobs) return the SAME grid object."""
+    key = (
+        params_fingerprint(params), repr(cfg),
+        resolution, float(threshold), supersample, dilate,
+    )
+    grid = _BAKE_REGISTRY.get(key)
+    if grid is None:
+        if len(_BAKE_REGISTRY) >= _BAKE_REGISTRY_CAP:
+            _BAKE_REGISTRY.clear()  # bakes recompute exactly; cheap reset
+        grid = bake_occupancy(
+            params, cfg, resolution=resolution, threshold=threshold,
+            supersample=supersample, dilate=dilate, chunk=chunk,
+        )
+        _BAKE_REGISTRY[key] = grid
+    return grid
+
+
 def occupancy_lookup(grid: OccupancyGrid, pts_unit: jnp.ndarray) -> jnp.ndarray:
     """(..., 3) points in [0,1] -> (...,) bool, True = occupied cell."""
     idx = jnp.clip(

@@ -236,6 +236,9 @@ def test_early_termination_equivalence():
 
 # ---------------------------------------------------------------------------
 # Trained-scene end-to-end: occupancy bake + full acceptance band.
+# Marked slow: these train a scene and render full frames — they run in
+# tier-1 (`pytest -q`) but are excluded from the CI fast lane
+# (`pytest -q -m "not slow"`).
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")
 def trained():
@@ -252,6 +255,7 @@ def SceneConfig_tiny():
                        n_test_views=2)
 
 
+@pytest.mark.slow
 def test_occupancy_bake_shapes_and_monotonicity(trained):
     params, _ = trained
     occ = bake_occupancy(params, CFG, resolution=16, supersample=2, dilate=1)
@@ -266,6 +270,7 @@ def test_occupancy_bake_shapes_and_monotonicity(trained):
     assert strict.occupied_fraction <= raw.occupied_fraction
 
 
+@pytest.mark.slow
 def test_evaluate_psnr_device_path_matches_host_loop(trained):
     """The device-resident SE accumulation reproduces the old per-chunk
     host-sync loop (satellite: one scalar per view, same numbers)."""
@@ -284,6 +289,7 @@ def test_evaluate_psnr_device_path_matches_host_loop(trained):
     assert abs(got - want) < 1e-2, (got, want)
 
 
+@pytest.mark.slow
 def test_trained_psnr_parity_within_acceptance_band(trained):
     """Fused full-frame PSNR within 0.1 dB of the reference renderer, with
     occupancy culling active (acceptance criterion)."""
@@ -297,6 +303,7 @@ def test_trained_psnr_parity_within_acceptance_band(trained):
         assert abs(fused - ref_psnr) < 0.1, (bits, fused, ref_psnr)
 
 
+@pytest.mark.slow
 def test_engine_render_frame_matches_render_rays(trained):
     params, ds = trained
     eng = FastRenderEngine(params, CFG, RCFG, mode="reference")

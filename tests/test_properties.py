@@ -1,0 +1,337 @@
+"""Property-based tests for the invariants the closed loop leans on.
+
+Three families (via the hypothesis shim, so they run with or without the
+real library):
+
+  1. linear quantization round trips inside the representable range with
+     error bounded by the quantization step;
+  2. `policy_latency` is monotone in bit width for every term with a
+     closed-form bit dependence (MLP, fine-level prefetch, model size —
+     and total cycles when only those units move; coarse-level cache
+     conflicts are genuinely non-monotone, which is WHY the search is
+     interesting, so only the size/prefetch terms are asserted there);
+  3. Pareto frontiers: no dominated survivor, full coverage of the input
+     set, permutation invariance, monotone hypervolume.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core.pareto import (
+    ConstraintSet,
+    ParetoFrontier,
+    ParetoPoint,
+    pareto_filter,
+)
+from repro.hwsim import (
+    HWConfig,
+    build_trace,
+    build_trace_constants,
+    policy_latency,
+)
+from repro.nerf.hash_encoding import HashEncodingConfig
+from repro.nerf.ngp import NGPConfig
+from repro.nerf.render import RenderConfig
+from repro.quant.linear_quant import (
+    activation_qparams,
+    fake_quant_activation,
+    fake_quant_weight,
+    weight_qparams,
+)
+
+
+# ---------------------------------------------------------------------------
+# 1. Quantize/dequantize round-trip error bounds
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    v_max=st.floats(0.05, 8.0),
+    seed=st.integers(0, 1000),
+)
+def test_weight_roundtrip_error_bounded(bits, v_max, seed):
+    """|fake_quant(x) - x| <= scale/2 for x inside the representable grid,
+    for both the paper-exact and conventional symmetric grids."""
+    rng = np.random.RandomState(seed)
+    for paper_exact in (True, False):
+        qp = weight_qparams(
+            jnp.float32(-v_max), jnp.float32(v_max), bits,
+            paper_exact=paper_exact,
+        )
+        s = float(qp.scale)
+        lo, hi = float(qp.q_min) * s, float(qp.q_max) * s
+        x = jnp.asarray(
+            rng.uniform(lo, hi, size=256).astype(np.float32)
+        )
+        err = np.abs(np.asarray(fake_quant_weight(x, qp)) - np.asarray(x))
+        # fp32 slack: x/s and q*s each round once.
+        assert err.max() <= 0.5 * s + 1e-5 * (1.0 + abs(hi)), (
+            bits, paper_exact, err.max(), s,
+        )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    v_min=st.floats(-4.0, -0.05),
+    span=st.floats(0.1, 8.0),
+    seed=st.integers(0, 1000),
+)
+def test_activation_roundtrip_error_bounded(bits, v_min, span, seed):
+    """Asymmetric activations: error <= scale/2 in the interior; <= scale
+    at the calibration edges (the rounded zero-point shifts the grid by
+    at most half a step)."""
+    rng = np.random.RandomState(seed)
+    v_max = v_min + span
+    qp = activation_qparams(jnp.float32(v_min), jnp.float32(v_max), bits)
+    s = float(qp.scale)
+
+    x_all = jnp.asarray(
+        rng.uniform(v_min, v_max, size=256).astype(np.float32)
+    )
+    err = np.abs(
+        np.asarray(fake_quant_activation(x_all, qp)) - np.asarray(x_all)
+    )
+    assert err.max() <= s + 1e-5 * (1.0 + abs(v_max) + abs(v_min))
+
+    # Interior (one full step away from both calibration edges): clipping
+    # cannot trigger, leaving only the round() half-step error.
+    interior = np.clip(x_all, v_min + s, v_max - s)
+    err_i = np.abs(
+        np.asarray(fake_quant_activation(jnp.asarray(interior), qp))
+        - interior
+    )
+    assert err_i.max() <= 0.5 * s + 1e-5 * (1.0 + abs(v_max) + abs(v_min))
+
+
+def test_weight_grid_contains_zero():
+    """Zero survives the round trip exactly (symmetric grid, Z = 0)."""
+    for bits in range(2, 9):
+        qp = weight_qparams(jnp.float32(-1.0), jnp.float32(1.0), bits)
+        assert float(fake_quant_weight(jnp.zeros(()), qp)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 2. policy_latency monotonicity in bit width
+# ---------------------------------------------------------------------------
+CFG = NGPConfig(
+    hash=HashEncodingConfig(n_levels=4, log2_table_size=9, base_resolution=4,
+                            max_resolution=32),
+    hidden_dim=16, color_hidden_dim=16, geo_feat_dim=7, sh_degree=2,
+)
+HW = HWConfig(coarse_levels=2)
+
+
+@pytest.fixture(scope="module")
+def latency_fixture():
+    rng = np.random.RandomState(3)
+    rays_o = rng.randn(32, 3).astype(np.float32) * 0.1
+    rays_d = rng.randn(32, 3).astype(np.float32)
+    rays_d /= np.linalg.norm(rays_d, axis=1, keepdims=True)
+    trace = build_trace(CFG, RenderConfig(n_samples=8), rays_o, rays_d)
+    tc = build_trace_constants(trace, HW, CFG.hash.n_features)
+
+    def run(hb, wb, ab):
+        out = policy_latency(
+            jnp.asarray(hb, jnp.float32), jnp.asarray(wb, jnp.float32),
+            jnp.asarray(ab, jnp.float32), tc, HW, 0.5,
+        )
+        return {k: float(v) for k, v in out.items()}
+
+    n_mlp = len(tc.mlp_dims)
+    return run, tc, n_mlp
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 500), bump=st.integers(1, 4))
+def test_policy_latency_monotone_noncoarse(latency_fixture, seed, bump):
+    """Raising any fine-hash / weight / activation bit width never lowers
+    total cycles or model size (closed-form terms; the coarse-level cache
+    term is exercised separately below)."""
+    run, tc, n_mlp = latency_fixture
+    rng = np.random.RandomState(seed)
+    hb = rng.randint(1, 9, size=tc.n_levels).astype(np.float32)
+    wb = rng.randint(1, 9, size=n_mlp).astype(np.float32)
+    ab = rng.randint(1, 9, size=n_mlp).astype(np.float32)
+    base = run(hb, wb, ab)
+
+    # One random non-coarse unit, bumped up (clipped to 8).
+    kind = rng.choice(["fine", "w", "a"])
+    if kind == "fine" and tc.n_levels > tc.n_coarse:
+        i = rng.randint(tc.n_coarse, tc.n_levels)
+        hb2 = hb.copy()
+        hb2[i] = min(8.0, hb2[i] + bump)
+        up = run(hb2, wb, ab)
+    elif kind == "w":
+        i = rng.randint(n_mlp)
+        wb2 = wb.copy()
+        wb2[i] = min(8.0, wb2[i] + bump)
+        up = run(hb, wb2, ab)
+    else:
+        i = rng.randint(n_mlp)
+        ab2 = ab.copy()
+        ab2[i] = min(8.0, ab2[i] + bump)
+        up = run(hb, wb, ab2)
+
+    tol = 1e-5 * max(base["total_cycles"], 1.0)
+    assert up["total_cycles"] >= base["total_cycles"] - tol
+    assert up["model_bytes"] >= base["model_bytes"] - 1e-6
+    assert up["mlp_compute_cycles"] >= base["mlp_compute_cycles"] - tol
+    assert (
+        up["subgrid_prefetch_cycles"]
+        >= base["subgrid_prefetch_cycles"] - tol
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_policy_latency_coarse_bits_size_monotone(latency_fixture, seed):
+    """Coarse hash bits: model size and DRAM line traffic per miss are
+    monotone; total cycles is NOT asserted — direct-mapped conflict
+    patterns legitimately shift with entry bytes."""
+    run, tc, n_mlp = latency_fixture
+    rng = np.random.RandomState(seed)
+    hb = rng.randint(1, 8, size=tc.n_levels).astype(np.float32)
+    wb = np.full(n_mlp, 8.0, np.float32)
+    base = run(hb, wb, wb)
+    i = rng.randint(0, max(tc.n_coarse, 1))
+    hb2 = hb.copy()
+    hb2[i] += 1.0
+    up = run(hb2, wb, wb)
+    assert up["model_bytes"] > base["model_bytes"]
+
+
+def test_uniform_bits_fully_ordered(latency_fixture):
+    """Uniform b-bit policies are totally ordered in latency AND size —
+    the sanity anchor for the reward's cost term."""
+    run, tc, n_mlp = latency_fixture
+    prev = None
+    for b in range(1, 9):
+        out = run(
+            np.full(tc.n_levels, b), np.full(n_mlp, b), np.full(n_mlp, b)
+        )
+        if prev is not None:
+            assert out["total_cycles"] >= prev["total_cycles"] * (1 - 1e-6)
+            assert out["model_bytes"] > prev["model_bytes"]
+        prev = out
+
+
+# ---------------------------------------------------------------------------
+# 3. Pareto frontier invariants
+# ---------------------------------------------------------------------------
+def _random_points(rng, n):
+    pts = []
+    for _ in range(n):
+        pts.append(ParetoPoint(
+            latency=float(rng.uniform(1.0, 10.0)),
+            psnr=float(rng.uniform(10.0, 40.0)),
+            model_bytes=float(rng.uniform(100.0, 1000.0)),
+        ))
+    return pts
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_frontier_no_dominated_survivor(seed, n):
+    pts = _random_points(np.random.RandomState(seed), n)
+    front = pareto_filter(pts)
+    assert front, "frontier of a non-empty set is non-empty"
+    for a in front:
+        assert not any(b.dominates(a) for b in front)
+        # Frontier points must come from the input set.
+        assert any(a is p for p in pts)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 60))
+def test_frontier_covers_input(seed, n):
+    """Every input point is dominated-or-tied by some frontier point."""
+    pts = _random_points(np.random.RandomState(seed), n)
+    front = pareto_filter(pts)
+    for p in pts:
+        assert any(q.dominates_or_ties(p) for q in front)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 60))
+def test_frontier_permutation_invariant(seed, n):
+    rng = np.random.RandomState(seed)
+    pts = _random_points(rng, n)
+    base = ParetoFrontier(pts).objective_set()
+    for _ in range(3):
+        perm = [pts[i] for i in rng.permutation(n)]
+        assert ParetoFrontier(perm).objective_set() == base
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_frontier_duplicate_objectives_all_survive(seed):
+    """Equal objective vectors tie (no strict inequality): neither evicts
+    the other, keeping insertion order irrelevant."""
+    rng = np.random.RandomState(seed)
+    p = _random_points(rng, 1)[0]
+    twin = ParetoPoint(
+        latency=p.latency, psnr=p.psnr, model_bytes=p.model_bytes,
+        scene="twin",
+    )
+    f = ParetoFrontier()
+    assert f.insert(p) and f.insert(twin)
+    assert len(f) == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40))
+def test_hypervolume_monotone_under_insertion(seed, n):
+    """Adding points never shrinks the dominated hypervolume."""
+    rng = np.random.RandomState(seed)
+    pts = _random_points(rng, n)
+    ref = (10.0, 10.0, 1000.0)  # worst corner of the sampling box
+    f = ParetoFrontier()
+    prev = 0.0
+    for p in pts:
+        f.insert(p)
+        hv = f.hypervolume(ref)
+        assert hv >= prev - 1e-9
+        prev = hv
+    assert prev >= 0.0
+
+
+def test_hypervolume_single_point_exact():
+    f = ParetoFrontier([ParetoPoint(latency=2.0, psnr=30.0, model_bytes=5.0)])
+    # Box between the point and ref (4, 20, 10): (4-2) * (30-20) * (10-5).
+    assert f.hypervolume((4.0, 20.0, 10.0)) == pytest.approx(100.0)
+    # A point outside the reference box contributes nothing.
+    f2 = ParetoFrontier([ParetoPoint(latency=5.0, psnr=30.0, model_bytes=5.0)])
+    assert f2.hypervolume((4.0, 20.0, 10.0)) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40))
+def test_constraints_filter_infeasible(seed, n):
+    rng = np.random.RandomState(seed)
+    pts = _random_points(rng, n)
+    cs = ConstraintSet(max_latency=5.0, min_psnr=20.0)
+    f = ParetoFrontier(pts, constraints=cs)
+    for p in f:
+        assert p.latency <= 5.0 and p.psnr >= 20.0
+    # Constrained frontier == unconstrained frontier of the feasible subset.
+    mask = cs.feasible_mask(
+        np.asarray([p.latency for p in pts]),
+        np.asarray([p.psnr for p in pts]),
+        np.asarray([p.model_bytes for p in pts]),
+    )
+    feas = [p for p, ok in zip(pts, mask) if ok]
+    assert f.objective_set() == ParetoFrontier(feas).objective_set()
+
+
+def test_frontier_json_roundtrip(tmp_path):
+    rng = np.random.RandomState(0)
+    f = ParetoFrontier(_random_points(rng, 20),
+                       constraints=ConstraintSet(max_latency=8.0))
+    path = tmp_path / "frontier.json"
+    f.save(path)
+    g = ParetoFrontier.load(path)
+    assert g.objective_set() == f.objective_set()
+    assert g.constraints == f.constraints
