@@ -30,12 +30,12 @@ def _rate(n: int, seconds: float) -> str:
     return f"{n / max(seconds, 1e-9):10.1f} policies/s ({seconds:.3f}s for {n})"
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--k", type=int, default=64, help="batch of policies")
     ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
     ap.add_argument("--repeats", type=int, default=3)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     print(f"[setup] building env at scale={args.scale} ...", flush=True)
     env, _ = build_env("chair", SCALES[args.scale])

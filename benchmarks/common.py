@@ -114,10 +114,10 @@ def run_scene_level(
     env, fp_psnr = build_env(scene, scale, seed=seed)
 
     # HERO's latency target: MDL = PTQ-uniform latency (high fidelity at
-    # lower-or-equal cost); MGL = 85% of it (resource constrained).
+    # lower-or-equal cost); MGL = 85% of it (resource constrained). The
+    # budget is per-call search state, not env state.
     ptq = ptq_baseline(env, uniform_bits)
     target = ptq.latency_cycles * (1.0 if level == "MDL" else 0.85)
-    env.set_latency_target(target)
 
     qat = qat_baseline(env, uniform_bits)
     caq = caq_proxy_baseline(
@@ -128,6 +128,7 @@ def run_scene_level(
         SearchConfig(n_episodes=scale.episodes, verbose=verbose, seed=seed),
         DDPGConfig(warmup_episodes=max(2, scale.episodes // 4),
                    updates_per_episode=16, seed=seed),
+        latency_target=target,
     )
     hb = hero.best
 

@@ -1,0 +1,43 @@
+"""Paper-table benchmark: Table II/III, Fig. 4, lambda ablation, roofline.
+
+Moved out of `benchmarks/run.py` so the runner is a pure registry
+dispatcher (`python -m benchmarks.run --list`).
+
+  PYTHONPATH=src:. python -m benchmarks.run paper_tables --scale quick
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="standard", choices=["quick", "standard"])
+    ap.add_argument("--skip-ngp", action="store_true",
+                    help="skip the (slower) NGP table computation")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    from benchmarks import ablation_lambda, fig4_cost_efficiency, roofline
+    from benchmarks import table2_latency_psnr, table3_fqr
+
+    if not args.skip_ngp:
+        print(f"[bench] computing NGP tables at scale={args.scale} "
+              "(cached per scene/level under experiments/ngp_tables)")
+        table2_latency_psnr.compute(args.scale, verbose=not args.quiet)
+        ablation_lambda.run()
+
+    print(table2_latency_psnr.render(args.scale))
+    print(table3_fqr.render(args.scale))
+    print(fig4_cost_efficiency.render(args.scale))
+    print(ablation_lambda.render())
+    print(roofline.render("16x16"))
+    print(roofline.render("2x16x16"))
+    print(f"\n[bench] total {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

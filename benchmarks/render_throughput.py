@@ -75,7 +75,7 @@ def _time(fn, repeats: int) -> float:
     return (time.perf_counter() - t0) / repeats
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
     ap.add_argument("--scene", default="chair")
@@ -86,7 +86,7 @@ def main():
                     help="uniform quantization width under test")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: quick scale")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.quick:
         args.scale = "quick"
 

@@ -1,42 +1,45 @@
-"""Benchmark entry point: one harness per paper table/figure + the
-assignment's roofline table.
+"""Benchmark runner: one registry, one dispatcher.
 
-  PYTHONPATH=src python -m benchmarks.run                # standard scale
-  PYTHONPATH=src python -m benchmarks.run --scale quick  # CI scale
-  PYTHONPATH=src python -m benchmarks.run --skip-ngp     # roofline only
+  PYTHONPATH=src:. python -m benchmarks.run --list
+  PYTHONPATH=src:. python -m benchmarks.run closed_loop --quick
+  PYTHONPATH=src:. python -m benchmarks.run serve --quick
+  PYTHONPATH=src:. python -m benchmarks.run paper_tables --scale quick
+
+Arguments after the benchmark name are passed through to that harness.
+Legacy invocations (`python -m benchmarks.run --scale quick`) still run
+the paper-tables flow.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import sys
+
+from benchmarks import registry
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", default="standard", choices=["quick", "standard"])
-    ap.add_argument("--skip-ngp", action="store_true",
-                    help="skip the (slower) NGP table computation")
-    ap.add_argument("--quiet", action="store_true")
-    args = ap.parse_args(argv)
+def _print_list() -> None:
+    entries = registry.names()
+    width = max(len(n) for n in entries)
+    print("registered benchmarks:")
+    for name, desc in sorted(entries.items()):
+        print(f"  {name:<{width}}  {desc}")
+    print("\nusage: python -m benchmarks.run <name> [args...]")
 
-    t0 = time.time()
-    from benchmarks import ablation_lambda, fig4_cost_efficiency, roofline
-    from benchmarks import table2_latency_psnr, table3_fqr
 
-    if not args.skip_ngp:
-        print(f"[bench] computing NGP tables at scale={args.scale} "
-              "(cached per scene/level under experiments/ngp_tables)")
-        table2_latency_psnr.compute(args.scale, verbose=not args.quiet)
-        ablation_lambda.run()
-
-    print(table2_latency_psnr.render(args.scale))
-    print(table3_fqr.render(args.scale))
-    print(fig4_cost_efficiency.render(args.scale))
-    print(ablation_lambda.render())
-    print(roofline.render("16x16"))
-    print(roofline.render("2x16x16"))
-    print(f"\n[bench] total {time.time() - t0:.0f}s")
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] in ("--list", "-l", "list"):
+        _print_list()
+        return 0
+    if argv and not argv[0].startswith("-"):
+        bench = registry.get(argv[0])
+        if bench is None:
+            print(f"unknown benchmark {argv[0]!r}\n", file=sys.stderr)
+            _print_list()
+            return 2
+        return int(bench.resolve()(argv[1:]) or 0)
+    # Legacy default: the paper-tables harness with the original flags.
+    return int(registry.get("paper_tables").resolve()(argv) or 0)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

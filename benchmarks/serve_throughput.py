@@ -1,0 +1,106 @@
+"""Serve smoke benchmark: hero.compile -> save -> load -> hero.serve.
+
+Compiles a QuantArtifact for the quick scene, round-trips it through
+disk, serves N view-render requests through the batched render service,
+and writes ``BENCH_serve.json`` (requests/sec, p50/p95 latency, PSNR
+parity vs the in-process fused path). With `--check-baseline`, fails
+(exit 1) when requests/sec drops more than `--max-drop` below the
+committed baseline or the serve/in-process PSNR delta leaves the 1e-3 dB
+band — the CI serve lane's gate. The JSON is written BEFORE the gate
+fires so a failing run still uploads its numbers.
+
+Usage (repo root on the path for `benchmarks.*`):
+  PYTHONPATH=src:. python benchmarks/serve_throughput.py --quick
+  PYTHONPATH=src:. python benchmarks/serve_throughput.py --quick \
+      --check-baseline benchmarks/BENCH_serve_baseline.json --max-drop 0.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+from repro.core.closed_loop import SceneScale, build_scene_env
+from repro.hero.artifact import compile_artifact
+from repro.hero.cli import run_serve
+
+PSNR_BAND_DB = 1e-3  # serve vs in-process fused path
+
+
+def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
+    """True when requests/sec is within `max_drop` of the baseline.
+
+    Machine-dependent metric: refresh the committed baseline from a CI
+    artifact if the gate trips without a perf-relevant change."""
+    base = json.loads(Path(baseline_path).read_text())
+    want = float(base["requests_per_sec"])
+    got = float(report["requests_per_sec"])
+    floor = want * (1.0 - max_drop)
+    ok = got >= floor
+    print(f"[bench-serve] regression gate: {got:.2f} req/s vs baseline "
+          f"{want:.2f} (floor {floor:.2f}, max drop {max_drop:.0%}) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--scene", default="chair")
+    ap.add_argument("--bits", type=int, default=8,
+                    help="uniform policy bit width to compile")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slot-rays", type=int, default=512)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--check-baseline", default=None,
+                    help="baseline BENCH_serve.json to gate against")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional requests/sec drop vs baseline")
+    args = ap.parse_args(argv)
+
+    scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    print(f"[bench-serve] compiling scene={args.scene} "
+          f"(uniform {args.bits}-bit, "
+          f"{'quick' if args.quick else 'standard'} scale) ...", flush=True)
+    env = build_scene_env(args.scene, scale, seed=args.seed)
+    artifact = compile_artifact(env, [args.bits] * env.n_units)
+
+    with tempfile.TemporaryDirectory(prefix="hero_artifact_") as tmp:
+        report = run_serve(
+            artifact, env.dataset, n_requests=args.requests,
+            slots=args.slots, slot_rays=args.slot_rays,
+            roundtrip_dir=tmp,  # measure the deployed bytes, not the object
+        )
+    report["scale"] = "quick" if args.quick else "standard"
+    Path(args.out).write_text(json.dumps(report, indent=2))
+
+    lat = report["latency_ms"]
+    print(f"\n== serve throughput ({report['requests']} requests x "
+          f"{report['rays_per_request']} rays, {args.slots} slots x "
+          f"{args.slot_rays} rays) ==")
+    print(f"  requests/sec:  {report['requests_per_sec']}")
+    print(f"  rays/sec:      {report['rays_per_sec']}")
+    print(f"  latency ms:    p50={lat['p50']} p95={lat['p95']} "
+          f"mean={lat['mean']} max={lat['max']}")
+    print(f"  PSNR parity:   serve {report['psnr_serve']:.4f} vs in-process "
+          f"{report['psnr_inprocess']:.4f} "
+          f"(delta {report['psnr_delta_db']:.4f} dB)")
+    print(f"  wrote {args.out}")
+
+    if report["psnr_delta_db"] > PSNR_BAND_DB:
+        print(f"[bench-serve] PSNR PARITY FAIL: {report['psnr_delta_db']:.4f}"
+              f" dB exceeds the {PSNR_BAND_DB} dB band", file=sys.stderr)
+        return 1
+    if args.check_baseline and not check_baseline(
+        report, args.check_baseline, args.max_drop
+    ):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,128 +1,24 @@
 """One-command closed-loop HERO search: scenes x hardware budgets in, a
 Pareto frontier (latency / PSNR / model size) out.
 
-Trains a small NGP per scene, builds the quantization env (cycle-accurate
-NeuRex simulator + calibrated quantizers + occupancy-culled fused render),
-then runs the population search per (scene, budget) cell — sharded over
-the local devices when more than one is visible — merging every evaluated
-policy into per-scene and joint Pareto frontiers. Writes the frontier and
-throughput numbers to BENCH_search.json and checkpoints after each cell,
-so an interrupted run resumes where it stopped (same --checkpoint path).
+Thin wrapper over the installed `hero-search` console entry point
+(`repro.hero.cli.search_main`) so the example keeps working with a bare
+checkout. The search trains a small NGP per scene, builds the
+quantization env against the chosen hardware target (`--hardware`,
+default the cycle-accurate NeuRex simulator), runs the population search
+per (scene, budget) cell — sharded over the local devices when more than
+one is visible — and merges every evaluated policy into per-scene and
+joint Pareto frontiers. Writes BENCH_search.json and checkpoints after
+each cell, so an interrupted run resumes where it stopped.
 
   PYTHONPATH=src python examples/hero_search.py --quick
   PYTHONPATH=src python examples/hero_search.py \
       --scenes chair,lego,ficus --budgets 1.0,0.85,0.7 --iterations 8
+  PYTHONPATH=src python examples/hero_search.py --quick --hardware neurex-edge
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
-import hashlib
-import json
-import sys
-from pathlib import Path
-
-import jax
-
-from repro.core.closed_loop import (
-    ClosedLoopConfig,
-    HeroSearchRun,
-    SceneScale,
-    bench_report,
-)
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser(
-        description="Closed-loop multi-scene HERO quantization search"
-    )
-    ap.add_argument("--scenes", default="chair,lego",
-                    help="comma-separated procedural scenes")
-    ap.add_argument("--budgets", default="1.0,0.85",
-                    help="latency budgets as fractions of 8-bit latency")
-    ap.add_argument("--iterations", type=int, default=4,
-                    help="population-search iterations per cell")
-    ap.add_argument("--population", type=int, default=8,
-                    help="policies scored per iteration")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--quick", action="store_true",
-                    help="small-scale end-to-end run (~minutes on CPU)")
-    ap.add_argument("--out", default="BENCH_search.json")
-    ap.add_argument("--checkpoint", default=None,
-                    help="cell-granular checkpoint path ('' disables; "
-                         "default: a per-config file under experiments/, so "
-                         "changing flags starts fresh instead of clashing "
-                         "with an old checkpoint)")
-    args = ap.parse_args(argv)
-
-    scenes = tuple(s for s in args.scenes.split(",") if s)
-    budgets = tuple(float(b) for b in args.budgets.split(",") if b)
-    scale = SceneScale.quick() if args.quick else SceneScale.standard()
-    n_iter = min(args.iterations, 3) if args.quick else args.iterations
-
-    n_dev = len(jax.devices())
-    print(f"[hero-search] {len(scenes)} scene(s) x {len(budgets)} budget(s), "
-          f"{n_iter} iteration(s) x {args.population} policies per cell, "
-          f"{n_dev} device(s){' (sharded)' if n_dev > 1 else ''}")
-
-    cfg = ClosedLoopConfig(
-        scenes=scenes,
-        budget_fracs=budgets,
-        seed=args.seed,
-        scale=scale,
-        n_iterations=n_iter,
-        population=args.population,
-    )
-    if args.checkpoint is None:
-        # Key the default checkpoint on the config fingerprint: different
-        # flags get different files, so re-invocations never collide with
-        # a checkpoint written under other settings.
-        tag = hashlib.sha256(
-            json.dumps(cfg.fingerprint(), sort_keys=True).encode()
-        ).hexdigest()[:10]
-        ckpt = f"experiments/hero_search_ckpt_{tag}.json"
-    else:
-        ckpt = args.checkpoint or None
-    cfg = dataclasses.replace(cfg, checkpoint_path=ckpt)
-    if cfg.checkpoint_path:
-        Path(cfg.checkpoint_path).parent.mkdir(parents=True, exist_ok=True)
-    try:
-        result = HeroSearchRun(cfg).run()
-    except ValueError as e:
-        if "closed-loop config" not in str(e):
-            raise
-        print(f"[hero-search] {e}", file=sys.stderr)
-        return 2
-
-    report = bench_report(result, cfg)
-    Path(args.out).write_text(json.dumps(report, indent=2))
-
-    print(f"\n[hero-search] {result.policies_evaluated} policies in "
-          f"{result.search_seconds:.1f}s search "
-          f"({result.policies_per_sec:.2f} policies/s), "
-          f"{result.wall_seconds:.1f}s wall")
-    print(f"[hero-search] joint frontier: {len(result.frontier)} points, "
-          f"hypervolume {result.hypervolume():.4f}")
-    if result.seconds_to_fixed_bit is not None:
-        print(f"[hero-search] beat uniform "
-              f"{result.fixed_bit_reference}-bit after "
-              f"{result.seconds_to_fixed_bit:.1f}s of search")
-    print(f"\n  {'scene':8s} {'budget':>6s} {'lat ratio':>9s} "
-          f"{'dPSNR dB':>9s} {'size ratio':>10s}")
-    for p in sorted(result.frontier.points, key=lambda p: (p.scene, p.latency)):
-        budget = f"{p.budget:g}" if p.budget is not None else "-"
-        print(f"  {p.scene:8s} {budget:>6s} {p.latency:9.3f} "
-              f"{p.psnr:+9.2f} {p.model_bytes:10.3f}")
-    print(f"\n[hero-search] wrote {args.out}"
-          + (f" (checkpoint: {cfg.checkpoint_path})" if cfg.checkpoint_path
-             else ""))
-
-    ok = report["frontier_size"] > 0 and report["frontier_valid_vs_8bit"]
-    if not ok:
-        print("[hero-search] frontier failed the fixed-8-bit validity "
-              "check", file=sys.stderr)
-    return 0 if ok else 1
-
+from repro.hero.cli import search_main as main
 
 if __name__ == "__main__":
     raise SystemExit(main())

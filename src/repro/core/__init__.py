@@ -53,6 +53,7 @@ from repro.core.closed_loop import (
     SceneBundle,
     SceneScale,
     build_scene_bundle,
+    build_scene_env,
 )
 
 __all__ = [
@@ -89,4 +90,5 @@ __all__ = [
     "SceneBundle",
     "SceneScale",
     "build_scene_bundle",
+    "build_scene_env",
 ]

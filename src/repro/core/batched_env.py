@@ -6,8 +6,9 @@ accuracy/latency/size space one point at a time. `BatchedQuantEnv` wraps an
 existing env and evaluates a (K, n_units) batch of bit assignments in two
 vmapped calls:
 
-  - latency / model size: `BatchedNeuRexSimulator` (jax.vmap over the
-    NeuRex analytic model — same trace, same numbers as the scalar path);
+  - latency / model size: the env's `HardwareTarget.batched` evaluator
+    (for the default target, `BatchedNeuRexSimulator` — jax.vmap over the
+    NeuRex analytic model, same trace, same numbers as the scalar path);
   - reconstruction quality: a *PSNR proxy* — render a fixed subset of
     held-out rays under each policy's fake-quant spec with shared weights,
     vmapped over the K bit arrays, with empty-space samples culled against
@@ -39,7 +40,6 @@ import numpy as np
 
 from repro.core.env import NGPQuantEnv
 from repro.core.reward import hero_reward
-from repro.hwsim.batched import BatchedNeuRexSimulator, policy_latency
 from repro.nerf.fast_render import build_cull_plan, fast_render_rays
 from repro.nerf.ngp import NGPQuantSpec
 from repro.nerf.train import finetune_ngp
@@ -103,10 +103,11 @@ class BatchedQuantEnv:
         self.bcfg = bcfg
         cfg = env.cfg
 
-        self.bsim = BatchedNeuRexSimulator(
+        # Population-rate evaluator from the env's hardware target (the
+        # vmapped NeuRex model for the default target; whatever batched
+        # form another registered target provides).
+        self.bsim = env.target.batched(
             env.trace,
-            env.sim.cfg,
-            pipeline_overlap=env.sim.pipeline_overlap,
             n_features=cfg.hash.n_features,
             resolutions=cfg.hash.resolutions(),
         )
@@ -159,28 +160,22 @@ class BatchedQuantEnv:
         # --- single-device vs device-sharded evaluation --------------------
         from repro.distributed.population import auto_shard, shard_population
 
-        tc = self.bsim.tc
+        # A target's batched sim may refuse the fully-on-device form (the
+        # NeuRex one does when int32 addresses would wrap; the memoized
+        # host kernel is then the only exact option) — sharding needs it.
+        lat_fn = self.bsim.vmappable() if hasattr(self.bsim, "vmappable") else None
         self.sharded = auto_shard() if sharded is None else bool(sharded)
-        if self.sharded and not tc.jax_addr_safe:
-            # The on-device fused path would wrap int32 addresses; the
-            # memoized host kernel (int64) is the only exact option.
+        if self.sharded and lat_fn is None:
             self.sharded = False
         if self.sharded:
             self._mse_batch = shard_population(
                 jax.vmap(_proxy_mse, in_axes=(None, 0, 0, 0)),
                 broadcast_argnums=(0,),
             )
-            # Fully fused latency model (grid-cache sort on device) so the
-            # whole per-policy evaluation lives on its shard; numbers match
+            # Fully fused latency model so the whole per-policy evaluation
+            # lives on its shard; for the NeuRex target the numbers match
             # the memoized host path (integer-exact stats, f32 compose).
-            sim_cfg, overlap = env.sim.cfg, env.sim.pipeline_overlap
-            self._lat_sharded = shard_population(
-                jax.vmap(
-                    lambda hb, wb, ab: policy_latency(
-                        hb, wb, ab, tc, sim_cfg, overlap
-                    )
-                ),
-            )
+            self._lat_sharded = shard_population(jax.vmap(lat_fn))
         else:
             self._mse_batch = jax.jit(
                 jax.vmap(_proxy_mse, in_axes=(None, 0, 0, 0))

@@ -31,7 +31,7 @@ import json
 import os
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -40,7 +40,7 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.env import EnvConfig, NGPQuantEnv
 from repro.core.pareto import ConstraintSet, ParetoFrontier, ParetoPoint
 from repro.core.search import PopulationSearchConfig, hero_population_search
-from repro.hwsim import HWConfig
+from repro.hero.targets import HardwareTarget, resolve_target
 
 # Joint-frontier hypervolume reference (normalized objectives): latency
 # ratio <= 1x the 8-bit baseline, PSNR delta >= -5 dB, size ratio <= 1.
@@ -125,14 +125,20 @@ class SceneBundle:
         )
 
 
-def build_scene_bundle(
+def build_scene_env(
     scene: str,
     scale: SceneScale = SceneScale(),
     seed: int = 0,
-    sharded: Optional[bool] = None,
     render_backend: str = "fused",
-) -> SceneBundle:
-    """Train a small NGP on `scene` and wrap it in env + batched env."""
+    hardware: Union[str, HardwareTarget, None] = "neurex",
+) -> NGPQuantEnv:
+    """Train a small NGP on `scene` and build its quantization env.
+
+    `hardware` is a registered target name or a `HardwareTarget` instance
+    (see `repro.hero.targets`). Name resolution passes a `coarse_levels`
+    override scaled to the scene's hash levels; targets without that knob
+    (e.g. the roofline family) ignore it.
+    """
     from repro.nerf.dataset import make_dataset
     from repro.nerf.hash_encoding import HashEncodingConfig
     from repro.nerf.ngp import NGPConfig
@@ -156,14 +162,32 @@ def build_scene_bundle(
     tcfg = TrainConfig(steps=scale.train_steps, batch_rays=512, lr=5e-3,
                        seed=seed)
     params, _ = train_ngp(ds, cfg, rcfg, tcfg)
-    env = NGPQuantEnv(
+    target = resolve_target(
+        hardware, coarse_levels=min(8, scale.n_levels // 2)
+    )
+    return NGPQuantEnv(
         params, ds, cfg, rcfg, tcfg,
         EnvConfig(
             finetune_steps=scale.finetune_steps, trace_rays=scale.trace_rays,
             render_backend=render_backend,
         ),
-        HWConfig(coarse_levels=min(8, scale.n_levels // 2)),
         seed=seed,
+        target=target,
+    )
+
+
+def build_scene_bundle(
+    scene: str,
+    scale: SceneScale = SceneScale(),
+    seed: int = 0,
+    sharded: Optional[bool] = None,
+    render_backend: str = "fused",
+    hardware: Union[str, HardwareTarget, None] = "neurex",
+) -> SceneBundle:
+    """Train a small NGP on `scene` and wrap it in env + batched env."""
+    env = build_scene_env(
+        scene, scale, seed=seed, render_backend=render_backend,
+        hardware=hardware,
     )
     benv = BatchedQuantEnv(
         env, BatchedEnvConfig(proxy_rays=scale.proxy_rays, seed=seed),
@@ -218,6 +242,10 @@ class ClosedLoopConfig:
     sharded: Optional[bool] = None
     checkpoint_path: Optional[str] = None
     verbose: bool = True
+    # Registered hardware-target name scene envs are built against (see
+    # repro.hero.targets); part of the checkpoint fingerprint because the
+    # frontier's latency axis means nothing across targets.
+    hardware: str = "neurex"
 
     def fingerprint(self) -> Dict:
         """Config identity a checkpoint must match to be resumable."""
@@ -229,6 +257,7 @@ class ClosedLoopConfig:
             "n_iterations": self.n_iterations,
             "population": self.population,
             "agent_fraction": self.agent_fraction,
+            "hardware": self.hardware,
         }
 
 
@@ -296,9 +325,14 @@ class HeroSearchRun:
         self,
         cfg: ClosedLoopConfig = ClosedLoopConfig(),
         bundles: Optional[Dict[str, SceneBundle]] = None,
+        target: Optional[HardwareTarget] = None,
     ):
+        """`target=` injects a `HardwareTarget` INSTANCE for scene-env
+        building (overriding the by-name `cfg.hardware` resolution) —
+        the hook for unregistered or pre-configured targets."""
         self.cfg = cfg
         self._bundles: Dict[str, SceneBundle] = dict(bundles or {})
+        self._target = target
 
     # ------------------------------------------------------------------
     def bundle(self, scene: str) -> SceneBundle:
@@ -309,6 +343,8 @@ class HeroSearchRun:
             self._bundles[scene] = build_scene_bundle(
                 scene, self.cfg.scale, seed=self._scene_seed(scene),
                 sharded=self.cfg.sharded,
+                hardware=self._target if self._target is not None
+                else self.cfg.hardware,
             )
         return self._bundles[scene]
 
@@ -326,12 +362,23 @@ class HeroSearchRun:
     # ------------------------------------------------------------------
     # Checkpointing
     # ------------------------------------------------------------------
+    def _fingerprint(self) -> Dict:
+        """Config identity checkpoints are written/matched against. An
+        injected target instance contributes its FULL `describe()` (not
+        just a name): two differently-configured instances must not
+        resume each other's frontiers — latency axes aren't comparable
+        across hardware configs."""
+        fp = self.cfg.fingerprint()
+        if self._target is not None:
+            fp["hardware"] = self._target.describe()
+        return fp
+
     def _load_checkpoint(self) -> Optional[Dict]:
         path = self.cfg.checkpoint_path
         if not path or not Path(path).exists():
             return None
         state = json.loads(Path(path).read_text())
-        if state.get("config") != self.cfg.fingerprint():
+        if state.get("config") != self._fingerprint():
             raise ValueError(
                 f"checkpoint {path} was written by a different closed-loop "
                 "config; refusing to resume (delete it to start over)"
@@ -352,7 +399,7 @@ class HeroSearchRun:
         if not path:
             return
         state = {
-            "config": self.cfg.fingerprint(),
+            "config": self._fingerprint(),
             "completed": completed,
             "joint_frontier": joint.to_json(),
             "scene_frontiers": {
@@ -594,6 +641,7 @@ def bench_report(result: ClosedLoopResult, cfg: ClosedLoopConfig) -> Dict:
     return {
         "scenes": list(cfg.scenes),
         "budget_fracs": [float(f) for f in cfg.budget_fracs],
+        "hardware": cfg.hardware,
         "seed": cfg.seed,
         "scale": dataclasses.asdict(cfg.scale),
         "n_iterations": cfg.n_iterations,

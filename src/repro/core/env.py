@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -26,7 +27,8 @@ import numpy as np
 
 from repro.core.action import action_to_bits
 from repro.core.reward import hero_reward
-from repro.hwsim import HWConfig, NeuRexSimulator, build_trace
+from repro.hero.targets import HardwareTarget, NeuRexTarget
+from repro.hwsim import HWConfig
 from repro.nerf.dataset import NGPDataset
 from repro.nerf.ngp import (
     NGPConfig,
@@ -81,9 +83,15 @@ class NGPQuantEnv:
         rcfg: RenderConfig,
         tcfg: TrainConfig,
         ecfg: EnvConfig = EnvConfig(),
-        hw_cfg: HWConfig = HWConfig(),
+        hw_cfg: Optional[HWConfig] = None,
         seed: int = 0,
+        target: Optional[HardwareTarget] = None,
     ):
+        """Hardware is injected as a `HardwareTarget` (`target=`); the
+        legacy `hw_cfg=` keeps working and means "the default NeuRex
+        target under this timing config". Passing both is a conflict."""
+        if target is not None and hw_cfg is not None:
+            raise ValueError("pass either target= or hw_cfg=, not both")
         self.params = params  # pretrained full-precision weights (frozen)
         self.dataset = dataset
         self.cfg = cfg
@@ -91,14 +99,16 @@ class NGPQuantEnv:
         self.tcfg = tcfg
         self.ecfg = ecfg
         self.units: List[QuantUnit] = make_quant_units(cfg)
-        self.sim = NeuRexSimulator(hw_cfg)
+        self.target: HardwareTarget = (
+            target if target is not None
+            else NeuRexTarget(hw_cfg if hw_cfg is not None else HWConfig())
+        )
         rng = np.random.RandomState(seed)
 
         # Simulator workload trace from real rays of the train set.
         idx = rng.randint(0, dataset.train_rays_o.shape[0], size=ecfg.trace_rays)
-        self.trace = build_trace(
-            cfg, rcfg, dataset.train_rays_o[idx], dataset.train_rays_d[idx],
-            subgrid_resolution=hw_cfg.subgrid_resolution,
+        self.trace = self.target.build_workload(
+            cfg, rcfg, dataset.train_rays_o[idx], dataset.train_rays_d[idx]
         )
 
         # Activation-range calibration on real samples (paper Sec. III-C
@@ -126,7 +136,7 @@ class NGPQuantEnv:
         self._obs_scale = np.maximum(np.abs(obs).max(axis=0), 1e-6)
 
         # All-8-bit baseline: original cost + PSNR_org (Sec. III-D).
-        base = self.sim.baseline(
+        base = self.target.baseline(
             self.trace, 8, n_features=cfg.hash.n_features,
             resolutions=cfg.hash.resolutions(),
         )
@@ -216,7 +226,7 @@ class NGPQuantEnv:
 
     def simulate_policy(self, policy: QuantPolicy):
         hb, wb, ab = self._policy_arrays(policy)
-        return self.sim.simulate(
+        return self.target.simulate(
             self.trace, hb, wb, ab, n_features=self.cfg.hash.n_features,
             resolutions=self.cfg.hash.resolutions(),
         )
@@ -252,13 +262,35 @@ class NGPQuantEnv:
         the closed-loop driver keys bundles and frontier tags on it)."""
         return self.dataset.scene_name
 
-    def set_latency_target(self, target: Optional[float]) -> None:
-        """Swap the active hardware budget without rebuilding the env.
+    @property
+    def sim(self):
+        """Legacy alias for the scalar simulator of a NeuRex-family target.
 
-        The budget is *search state*, not env identity: the trace,
-        calibration, baselines, and occupancy grid are all budget-
-        independent, so the closed loop re-points one env at many
-        budgets. Prefer passing `target=` per call where possible."""
+        New code should use `self.target` (`HardwareTarget` protocol);
+        non-NeuRex targets have no `NeuRexSimulator` to expose."""
+        sim = getattr(self.target, "sim", None)
+        if sim is None:
+            raise AttributeError(
+                f"hardware target {self.target.name!r} exposes no scalar "
+                "NeuRex simulator; use env.target"
+            )
+        return sim
+
+    def set_latency_target(self, target: Optional[float]) -> None:
+        """Deprecated: mutate the env-default hardware budget.
+
+        The budget is *search state*, not env identity — pass it per call
+        instead (`hero_search(..., latency_target=...)`,
+        `enforce_latency_target(bits, target=...)`,
+        `evaluate_population(..., latency_target=...)`), which lets one
+        env serve many budgets concurrently."""
+        warnings.warn(
+            "NGPQuantEnv.set_latency_target is deprecated; pass "
+            "latency_target per call (hero_search / enforce_latency_target /"
+            " evaluate_population) instead of mutating the env",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.ecfg = dataclasses.replace(self.ecfg, latency_target=target)
 
     # ------------------------------------------------------------------

@@ -52,9 +52,15 @@ def hero_search(
     env: NGPQuantEnv,
     scfg: SearchConfig = SearchConfig(),
     dcfg: Optional[DDPGConfig] = None,
+    latency_target: Optional[float] = None,
 ) -> SearchResult:
+    """Episodic DDPG search. `latency_target` is per-call search state
+    (None falls back to the env-configured budget) — the replacement for
+    the deprecated `env.set_latency_target` mutation."""
     t_start = time.time()
     agent = DDPGAgent(dcfg or DDPGConfig(seed=scfg.seed))
+    if latency_target is None:
+        latency_target = env.ecfg.latency_target
 
     best: Optional[EpisodeResult] = None
     history: List[EpisodeResult] = []
@@ -65,7 +71,7 @@ def hero_search(
 
         # --- bits + constraints -----------------------------------------
         bits = env.actions_to_bits(actions)
-        bits = env.enforce_latency_target(bits)
+        bits = env.enforce_latency_target(bits, target=latency_target)
         # The executed actions are the (possibly constraint-clamped) bits —
         # feed those back so the critic sees what actually ran.
         executed = [bits_to_action(b, env.ecfg.b_min, env.ecfg.b_max) for b in bits]

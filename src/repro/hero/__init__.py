@@ -1,0 +1,80 @@
+"""Public HERO API: hardware targets, deployable artifacts, render serving.
+
+    import repro.hero as hero
+
+    result   = hero.search(scenes=("chair",), budget_fracs=(1.0, 0.85))
+    scene, bits = hero.best_bits(result)
+    artifact = hero.compile_scene(scene, bits)   # or hero.compile(env, bits)
+    artifact.save("artifacts/chair")
+    service  = hero.serve(hero.QuantArtifact.load("artifacts/chair"))
+    colors   = service.render(rays_o, rays_d)
+
+Hardware targets (`HardwareTarget` protocol, `make_target`/`list_targets`)
+plug different accelerator models into the same search loop; the NeuRex
+simulator is the default, `roofline-edge` is an analytic non-NeuRex
+alternative, and `register_target` adds your own.
+
+Layering note: `repro.core` imports `repro.hero.targets`, so this
+package's `__init__` only imports the (cycle-free) targets module eagerly;
+the facade and its dependencies load lazily on first attribute access.
+"""
+from repro.hero.targets import (
+    BatchedHardwareSim,
+    HardwareTarget,
+    NeuRexTarget,
+    RooflineHWConfig,
+    RooflineTarget,
+    list_targets,
+    make_target,
+    register_target,
+    resolve_target,
+)
+
+__all__ = [
+    "BatchedHardwareSim",
+    "HardwareTarget",
+    "NeuRexTarget",
+    "RooflineHWConfig",
+    "RooflineTarget",
+    "list_targets",
+    "make_target",
+    "register_target",
+    "resolve_target",
+    # lazy (PEP 562):
+    "search",
+    "compile",
+    "compile_scene",
+    "serve",
+    "best_bits",
+    "QuantArtifact",
+    "compile_artifact",
+    "RenderService",
+    "ServeConfig",
+]
+
+_LAZY = {
+    "search": ("repro.hero.api", "search"),
+    "compile": ("repro.hero.api", "compile"),
+    "compile_scene": ("repro.hero.api", "compile_scene"),
+    "serve": ("repro.hero.api", "serve"),
+    "best_bits": ("repro.hero.api", "best_bits"),
+    "QuantArtifact": ("repro.hero.artifact", "QuantArtifact"),
+    "compile_artifact": ("repro.hero.artifact", "compile_artifact"),
+    "RenderService": ("repro.hero.service", "RenderService"),
+    "ServeConfig": ("repro.hero.service", "ServeConfig"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        value = getattr(importlib.import_module(module), attr)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module 'repro.hero' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

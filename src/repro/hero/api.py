@@ -1,0 +1,121 @@
+"""`repro.hero` facade: search -> compile -> serve.
+
+The three documented entry points of the reproduction:
+
+  result   = hero.search(scenes=..., budget_fracs=..., hardware="neurex")
+  artifact = hero.compile(env_or_bundle, bits)      # or hero.compile_scene
+  service  = hero.serve(artifact)                   # request-batching renderer
+
+`search` wraps the closed-loop multi-scene driver (`core/closed_loop.py`),
+`compile` lowers a policy to a deployable `QuantArtifact`, and `serve`
+stands up the batched fused render service. Everything underneath stays
+importable — these are thin, stable names, not a new layer of behavior.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.hero.artifact import QuantArtifact, compile_artifact
+from repro.hero.service import RenderService, ServeConfig
+from repro.hero.service import serve as _serve
+from repro.hero.targets import HardwareTarget
+
+
+def search(
+    scenes: Sequence[str] = ("chair", "lego"),
+    budget_fracs: Sequence[float] = (1.0, 0.85),
+    *,
+    hardware: Union[str, HardwareTarget] = "neurex",
+    scale=None,  # SceneScale; None = SceneScale.quick()
+    n_iterations: int = 4,
+    population: int = 8,
+    agent_fraction: float = 0.5,
+    seed: int = 0,
+    sharded: Optional[bool] = None,
+    checkpoint_path: Optional[str] = None,
+    verbose: bool = True,
+    stop_after_cells: Optional[int] = None,
+):
+    """Closed-loop HERO search over scenes x latency budgets.
+
+    Returns a `ClosedLoopResult` (joint + per-scene Pareto frontiers,
+    per-cell summaries). `hardware` is a registered target name (see
+    `repro.hero.list_targets()`) or a `HardwareTarget` instance.
+    """
+    from repro.core.closed_loop import ClosedLoopConfig, HeroSearchRun, SceneScale
+
+    if scale is None:
+        scale = SceneScale.quick()
+    hw_name = hardware if isinstance(hardware, str) else hardware.name
+    cfg = ClosedLoopConfig(
+        scenes=tuple(scenes),
+        budget_fracs=tuple(float(b) for b in budget_fracs),
+        seed=seed,
+        scale=scale,
+        n_iterations=n_iterations,
+        population=population,
+        agent_fraction=agent_fraction,
+        sharded=sharded,
+        checkpoint_path=checkpoint_path,
+        verbose=verbose,
+        hardware=hw_name,
+    )
+    run = HeroSearchRun(
+        cfg, target=None if isinstance(hardware, str) else hardware
+    )
+    return run.run(stop_after_cells=stop_after_cells)
+
+
+def compile(  # noqa: A001 — the documented entry-point name
+    env_or_bundle,
+    bits: Optional[Sequence[int]] = None,
+    finetune_steps: Optional[int] = None,
+) -> QuantArtifact:
+    """Lower (scene env, policy bits) to a deployable `QuantArtifact`.
+
+    Accepts an `NGPQuantEnv` or a closed-loop `SceneBundle`; `bits=None`
+    compiles uniform 8-bit.
+    """
+    env = getattr(env_or_bundle, "env", env_or_bundle)
+    return compile_artifact(env, bits, finetune_steps=finetune_steps)
+
+
+def compile_scene(
+    scene: str,
+    bits: Optional[Sequence[int]] = None,
+    *,
+    scale=None,  # SceneScale; None = SceneScale.quick()
+    hardware: Union[str, HardwareTarget] = "neurex",
+    seed: int = 0,
+    finetune_steps: Optional[int] = None,
+) -> QuantArtifact:
+    """Train the scene's NGP, build its quantization env, and compile
+    `bits` in one call — the from-scratch path the CLI and the serve
+    benchmark use."""
+    from repro.core.closed_loop import SceneScale, build_scene_env
+
+    if scale is None:
+        scale = SceneScale.quick()
+    env = build_scene_env(scene, scale, seed=seed, hardware=hardware)
+    return compile_artifact(env, bits, finetune_steps=finetune_steps)
+
+
+def serve(
+    artifact: QuantArtifact,
+    cfg: ServeConfig = ServeConfig(),
+    warmup: bool = True,
+) -> RenderService:
+    """Stand up the request-batching fused render service for an artifact."""
+    return _serve(artifact, cfg, warmup=warmup)
+
+
+def best_bits(result, scene: Optional[str] = None) -> Tuple[str, List[int]]:
+    """(scene, bits) of the highest-reward cell in a search result —
+    the natural input to `hero.compile`."""
+    cells = result.cells
+    if scene is not None:
+        cells = [c for c in cells if c.scene == scene]
+    if not cells:
+        raise ValueError(f"no completed search cells for scene={scene!r}")
+    top = max(cells, key=lambda c: c.best_reward)
+    return top.scene, list(top.best_bits)

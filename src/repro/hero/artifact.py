@@ -1,0 +1,268 @@
+"""QuantArtifact: the deployable output of a HERO search.
+
+A search run used to end in a frontier JSON — a dict of bit vectors. The
+artifact closes the loop to deployment: `compile_artifact(env, bits)`
+QAT-finetunes the pretrained weights under the policy, quantizes them to
+the packed integer inference form (`FusedPack`), and bundles everything a
+render service needs to serve the scene without the training stack:
+
+  - the finetuned float parameters (reference mode / re-packing);
+  - the policy bits + calibration ranges (the quant spec is re-derived
+    deterministically on load — one source of truth);
+  - the packed `FusedPack` int8 weight codes + scales + fake-quantized
+    hash tables (loaded verbatim, not rebuilt: the bundle IS the deploy
+    format);
+  - the baked occupancy grid (empty-space culling at serve time);
+  - hardware-target metadata + predicted latency/model-size/PSNR.
+
+`save`/`load` use one directory: `arrays.npz` + `manifest.json` with
+per-array sha256 and a schema version — corrupt or truncated bundles fail
+loudly, the same auditability contract as `repro.checkpoint`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nerf.fast_render import FastRenderEngine, FusedPack, build_fused_pack
+from repro.nerf.hash_encoding import HashEncodingConfig
+from repro.nerf.ngp import (
+    NGPConfig,
+    NGPQuantSpec,
+    make_quant_units,
+    spec_from_policy,
+)
+from repro.nerf.occupancy import OccupancyGrid, bake_occupancy_cached
+from repro.nerf.render import RenderConfig
+from repro.quant.policy import QuantPolicy
+
+SCHEMA_VERSION = 1
+# npz key separator: parameter names themselves contain "/" ("sigma/0"),
+# so nesting is encoded with a separator that cannot appear in names.
+_SEP = "::"
+
+
+@dataclasses.dataclass
+class QuantArtifact:
+    """Serialized deployable bundle for one (scene, policy) pair."""
+
+    scene: str
+    bits: List[int]
+    cfg: NGPConfig
+    rcfg: RenderConfig
+    # Full SceneConfig (as a dict) of the dataset the compile metrics were
+    # measured on — a consumer can rebuild the EXACT eval set (parity
+    # comparisons against `metrics["psnr"]` are meaningless on any other).
+    scene_cfg: Dict
+    params: Dict  # finetuned float weights, {top: {sub: array}}
+    act_ranges: jnp.ndarray  # (n_linear, 2) calibrated activation ranges
+    pack: FusedPack  # packed integer inference form
+    occ: OccupancyGrid
+    hardware: Dict  # HardwareTarget.describe() of the search target
+    metrics: Dict  # psnr / latency_cycles / model_bytes / fqr at compile
+    schema_version: int = SCHEMA_VERSION
+
+    # ------------------------------------------------------------------
+    def spec(self) -> NGPQuantSpec:
+        """Quant spec re-derived from (bits, act_ranges) — identical to the
+        one the compile step used (same `spec_from_policy` path)."""
+        units = make_quant_units(self.cfg)
+        policy = QuantPolicy.uniform(units, 8).with_bits(list(self.bits))
+        return spec_from_policy(self.cfg, policy, self.act_ranges)
+
+    def engine(self, **kw) -> FastRenderEngine:
+        """Fused render engine over the LOADED pack (codes are served
+        verbatim, not re-quantized)."""
+        kw.setdefault("mode", "fused")
+        return FastRenderEngine(
+            self.params, self.cfg, self.rcfg, spec=self.spec(), occ=self.occ,
+            pack=self.pack, **kw,
+        )
+
+    # ------------------------------------------------------------------
+    # Serialization
+    # ------------------------------------------------------------------
+    def _arrays(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {"act_ranges": np.asarray(self.act_ranges)}
+        for top, sub in self.params.items():
+            for k, v in sub.items():
+                out[f"params{_SEP}{top}{_SEP}{k}"] = np.asarray(v)
+        for name, lyr in self.pack.layers.items():
+            for k, v in lyr.items():
+                out[f"pack{_SEP}{name}{_SEP}{k}"] = np.asarray(v)
+        for name, t in self.pack.hash_tables.items():
+            out[f"packtab{_SEP}{name}"] = np.asarray(t)
+        out["occ"] = np.asarray(self.occ.occ)
+        return out
+
+    def save(self, path) -> Path:
+        """Write the bundle to directory `path` (npz first, manifest last,
+        both via tmp + rename so a crash never leaves a loadable lie)."""
+        path = Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        arrays = self._arrays()
+        manifest = {
+            "schema_version": self.schema_version,
+            "scene": self.scene,
+            "bits": [int(b) for b in self.bits],
+            "cfg": dataclasses.asdict(self.cfg),
+            "rcfg": dataclasses.asdict(self.rcfg),
+            "scene_cfg": self.scene_cfg,
+            "pack_modes": list(self.pack.modes),
+            "occ": {
+                "resolution": self.occ.resolution,
+                "threshold": self.occ.threshold,
+                "occupied_fraction": self.occ.occupied_fraction,
+            },
+            "hardware": self.hardware,
+            "metrics": self.metrics,
+            "arrays": {
+                k: {
+                    "shape": list(v.shape),
+                    "dtype": str(v.dtype),
+                    "sha256": _sha(v),
+                }
+                for k, v in arrays.items()
+            },
+        }
+        tmp_npz = path / "arrays.npz.tmp"
+        with open(tmp_npz, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp_npz, path / "arrays.npz")
+        tmp_manifest = path / "manifest.json.tmp"
+        tmp_manifest.write_text(json.dumps(manifest, indent=2))
+        os.replace(tmp_manifest, path / "manifest.json")
+        return path
+
+    @staticmethod
+    def load(path) -> "QuantArtifact":
+        path = Path(path)
+        manifest = json.loads((path / "manifest.json").read_text())
+        version = int(manifest.get("schema_version", -1))
+        if version > SCHEMA_VERSION or version < 1:
+            raise ValueError(
+                f"artifact {path} has schema_version={version}; this build "
+                f"reads <= {SCHEMA_VERSION}"
+            )
+        with np.load(path / "arrays.npz") as z:
+            arrays = {k: z[k] for k in z.files}
+
+        want = manifest["arrays"]
+        if set(want) != set(arrays):
+            raise ValueError(
+                f"artifact {path}: manifest/npz array sets differ "
+                f"(missing {sorted(set(want) - set(arrays))}, "
+                f"unexpected {sorted(set(arrays) - set(want))})"
+            )
+        for k, meta in want.items():
+            if _sha(arrays[k]) != meta["sha256"]:
+                raise ValueError(f"artifact {path}: array {k!r} failed its "
+                                 "sha256 integrity check")
+
+        cfg_d = dict(manifest["cfg"])
+        cfg = NGPConfig(hash=HashEncodingConfig(**cfg_d.pop("hash")), **cfg_d)
+        rcfg = RenderConfig(**manifest["rcfg"])
+
+        params: Dict[str, Dict] = {}
+        layers: Dict[str, Dict] = {}
+        tables: Dict[str, jnp.ndarray] = {}
+        for k, v in arrays.items():
+            parts = k.split(_SEP)
+            if parts[0] == "params":
+                params.setdefault(parts[1], {})[parts[2]] = jnp.asarray(v)
+            elif parts[0] == "pack":
+                layers.setdefault(parts[1], {})[parts[2]] = jnp.asarray(v)
+            elif parts[0] == "packtab":
+                tables[parts[1]] = jnp.asarray(v)
+
+        occ_meta = manifest["occ"]
+        occ = OccupancyGrid(
+            occ=jnp.asarray(arrays["occ"]),
+            resolution=int(occ_meta["resolution"]),
+            threshold=float(occ_meta["threshold"]),
+            occupied_fraction=float(occ_meta["occupied_fraction"]),
+        )
+        return QuantArtifact(
+            scene=manifest["scene"],
+            bits=[int(b) for b in manifest["bits"]],
+            cfg=cfg,
+            rcfg=rcfg,
+            scene_cfg=dict(manifest["scene_cfg"]),
+            params=params,
+            act_ranges=jnp.asarray(arrays["act_ranges"]),
+            pack=FusedPack(
+                layers=layers, hash_tables=tables,
+                modes=tuple(manifest["pack_modes"]),
+            ),
+            occ=occ,
+            hardware=manifest["hardware"],
+            metrics=manifest["metrics"],
+            schema_version=version,
+        )
+
+
+def _sha(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Compile: (env, policy bits) -> QuantArtifact
+# ---------------------------------------------------------------------------
+def compile_artifact(
+    env,  # NGPQuantEnv (typed loosely to avoid an import cycle)
+    bits: Optional[Sequence[int]] = None,
+    finetune_steps: Optional[int] = None,
+) -> QuantArtifact:
+    """Lower a searched policy to a deployable bundle.
+
+    Runs the same QAT finetune + fused PSNR evaluation the env's episode
+    path uses, simulates the policy on the env's hardware target, packs
+    the finetuned weights to integer inference form, and bundles the
+    occupancy grid. `bits=None` compiles the uniform 8-bit policy.
+    """
+    from repro.nerf.train import finetune_ngp
+
+    if bits is None:
+        bits = [8] * env.n_units
+    bits = [int(b) for b in bits]
+    steps = env.ecfg.finetune_steps if finetune_steps is None else finetune_steps
+
+    policy = QuantPolicy.uniform(env.units, 8).with_bits(bits)
+    spec = spec_from_policy(env.cfg, policy, env.act_ranges)
+    ft_params, _ = finetune_ngp(
+        dict(env.params), env.dataset, env.cfg, env.rcfg, env.tcfg, spec, steps
+    )
+    psnr = env.eval_psnr(ft_params, spec)
+    lat = env.simulate_policy(policy)
+    occ = env.occ
+    if occ is None:  # reference-backend env: bake for the fused artifact
+        occ = bake_occupancy_cached(
+            env.params, env.cfg, resolution=env.ecfg.occ_resolution,
+            threshold=env.ecfg.occ_threshold,
+        )
+    return QuantArtifact(
+        scene=env.scene_name,
+        bits=bits,
+        cfg=env.cfg,
+        rcfg=env.rcfg,
+        scene_cfg=dataclasses.asdict(env.dataset.cfg),
+        params=ft_params,
+        act_ranges=env.act_ranges,
+        pack=build_fused_pack(ft_params, env.cfg, spec),
+        occ=occ,
+        hardware=env.target.describe(),
+        metrics={
+            "psnr": float(psnr),
+            "latency_cycles": float(lat.total_cycles),
+            "model_bytes": float(lat.model_bytes),
+            "fqr": float(policy.fqr()),
+            "finetune_steps": int(steps),
+        },
+    )

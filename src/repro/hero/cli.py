@@ -1,0 +1,313 @@
+"""Console entry points: `hero-search` and `hero-serve`.
+
+Installed via `[project.scripts]` in pyproject.toml; also reachable as
+`python -m repro.hero.cli <search|serve> ...` and wrapped by
+`examples/hero_search.py` / `benchmarks/serve_throughput.py` (which adds
+the CI regression gate on top of `run_serve`).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# hero-search
+# ---------------------------------------------------------------------------
+def search_main(argv=None) -> int:
+    """Closed-loop multi-scene HERO search: scenes x hardware budgets in,
+    a Pareto frontier (+ BENCH_search.json) out."""
+    import jax
+
+    from repro.core.closed_loop import (
+        ClosedLoopConfig,
+        HeroSearchRun,
+        SceneScale,
+        bench_report,
+    )
+    from repro.hero.targets import list_targets
+
+    ap = argparse.ArgumentParser(
+        prog="hero-search",
+        description="Closed-loop multi-scene HERO quantization search",
+    )
+    ap.add_argument("--scenes", default="chair,lego",
+                    help="comma-separated procedural scenes")
+    ap.add_argument("--budgets", default="1.0,0.85",
+                    help="latency budgets as fractions of 8-bit latency")
+    ap.add_argument("--hardware", default="neurex",
+                    choices=sorted(list_targets()),
+                    help="registered hardware target the search optimizes for")
+    ap.add_argument("--iterations", type=int, default=4,
+                    help="population-search iterations per cell")
+    ap.add_argument("--population", type=int, default=8,
+                    help="policies scored per iteration")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="small-scale end-to-end run (~minutes on CPU)")
+    ap.add_argument("--out", default="BENCH_search.json")
+    ap.add_argument("--checkpoint", default=None,
+                    help="cell-granular checkpoint path ('' disables; "
+                         "default: a per-config file under experiments/, so "
+                         "changing flags starts fresh instead of clashing "
+                         "with an old checkpoint)")
+    args = ap.parse_args(argv)
+
+    scenes = tuple(s for s in args.scenes.split(",") if s)
+    budgets = tuple(float(b) for b in args.budgets.split(",") if b)
+    scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    n_iter = min(args.iterations, 3) if args.quick else args.iterations
+
+    n_dev = len(jax.devices())
+    print(f"[hero-search] {len(scenes)} scene(s) x {len(budgets)} budget(s), "
+          f"{n_iter} iteration(s) x {args.population} policies per cell, "
+          f"target={args.hardware}, "
+          f"{n_dev} device(s){' (sharded)' if n_dev > 1 else ''}")
+
+    cfg = ClosedLoopConfig(
+        scenes=scenes,
+        budget_fracs=budgets,
+        seed=args.seed,
+        scale=scale,
+        n_iterations=n_iter,
+        population=args.population,
+        hardware=args.hardware,
+    )
+    if args.checkpoint is None:
+        # Key the default checkpoint on the config fingerprint: different
+        # flags get different files, so re-invocations never collide with
+        # a checkpoint written under other settings.
+        tag = hashlib.sha256(
+            json.dumps(cfg.fingerprint(), sort_keys=True).encode()
+        ).hexdigest()[:10]
+        ckpt = f"experiments/hero_search_ckpt_{tag}.json"
+    else:
+        ckpt = args.checkpoint or None
+    cfg = dataclasses.replace(cfg, checkpoint_path=ckpt)
+    if cfg.checkpoint_path:
+        Path(cfg.checkpoint_path).parent.mkdir(parents=True, exist_ok=True)
+    try:
+        result = HeroSearchRun(cfg).run()
+    except ValueError as e:
+        if "closed-loop config" not in str(e):
+            raise
+        print(f"[hero-search] {e}", file=sys.stderr)
+        return 2
+
+    report = bench_report(result, cfg)
+    Path(args.out).write_text(json.dumps(report, indent=2))
+
+    print(f"\n[hero-search] {result.policies_evaluated} policies in "
+          f"{result.search_seconds:.1f}s search "
+          f"({result.policies_per_sec:.2f} policies/s), "
+          f"{result.wall_seconds:.1f}s wall")
+    print(f"[hero-search] joint frontier: {len(result.frontier)} points, "
+          f"hypervolume {result.hypervolume():.4f}")
+    if result.seconds_to_fixed_bit is not None:
+        print(f"[hero-search] beat uniform "
+              f"{result.fixed_bit_reference}-bit after "
+              f"{result.seconds_to_fixed_bit:.1f}s of search")
+    print(f"\n  {'scene':8s} {'budget':>6s} {'lat ratio':>9s} "
+          f"{'dPSNR dB':>9s} {'size ratio':>10s}")
+    for p in sorted(result.frontier.points, key=lambda p: (p.scene, p.latency)):
+        budget = f"{p.budget:g}" if p.budget is not None else "-"
+        print(f"  {p.scene:8s} {budget:>6s} {p.latency:9.3f} "
+              f"{p.psnr:+9.2f} {p.model_bytes:10.3f}")
+    print(f"\n[hero-search] wrote {args.out}"
+          + (f" (checkpoint: {cfg.checkpoint_path})" if cfg.checkpoint_path
+             else ""))
+
+    ok = report["frontier_size"] > 0 and report["frontier_valid_vs_8bit"]
+    if not ok:
+        print("[hero-search] frontier failed the fixed-8-bit validity "
+              "check", file=sys.stderr)
+    return 0 if ok else 1
+
+
+# ---------------------------------------------------------------------------
+# hero-serve
+# ---------------------------------------------------------------------------
+def run_serve(
+    artifact,
+    dataset,
+    n_requests: int = 32,
+    slots: int = 4,
+    slot_rays: int = 512,
+    budget="auto",
+    roundtrip_dir: Optional[str] = None,
+) -> Dict:
+    """Serve `n_requests` view renders from the artifact and report
+    throughput, latency percentiles, and PSNR parity vs the in-process
+    fused path (the number recorded at compile time).
+
+    `roundtrip_dir` forces a save -> load through disk before serving, so
+    the measured service runs on the exact bytes a deployment would.
+    """
+    import numpy as np
+
+    from repro.hero.artifact import QuantArtifact
+    from repro.hero.service import ServeConfig, serve
+
+    if roundtrip_dir is not None:
+        artifact.save(roundtrip_dir)
+        artifact = QuantArtifact.load(roundtrip_dir)
+
+    scfg = ServeConfig(slots=slots, slot_rays=slot_rays, budget=budget)
+    svc = serve(artifact, scfg)  # warmed up: compile excluded from stats
+
+    views = dataset.test_rays_o.shape[0]
+    rids = []
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        v = i % views
+        rids.append(svc.submit(dataset.test_rays_o[v], dataset.test_rays_d[v]))
+    svc.drain()
+    wall = time.perf_counter() - t0
+    stats = svc.stats()  # snapshot BEFORE any untimed parity fill-in
+
+    # PSNR over ONE full pass of the distinct views (the in-process
+    # reference covers the whole test set, so the parity comparison must
+    # too): views the timed run did not touch render untimed here.
+    view_colors = {i % views: rids[i] for i in range(n_requests)}
+    se, px = 0.0, 0
+    for v in range(views):
+        rid = view_colors.get(v)
+        colors = (
+            svc.result(rid) if rid is not None
+            else svc.render(dataset.test_rays_o[v], dataset.test_rays_d[v])
+        )
+        gt = dataset.test_rgb[v].reshape(-1, 3)
+        se += float(((colors - gt) ** 2).sum())
+        px += gt.size
+    psnr_serve = float(-10.0 * np.log10(max(se / px, 1e-12)))
+    psnr_inproc = float(artifact.metrics["psnr"])
+    return {
+        "scene": artifact.scene,
+        "bits": list(artifact.bits),
+        "hardware": artifact.hardware.get("name"),
+        "requests": n_requests,
+        "rays_per_request": int(dataset.test_rays_o.shape[1]),
+        "roundtrip_through_disk": roundtrip_dir is not None,
+        "submit_to_drain_seconds": round(wall, 4),
+        "requests_per_sec": stats["requests_per_sec"],
+        "rays_per_sec": stats["rays_per_sec"],
+        "latency_ms": stats["latency_ms"],
+        "device_steps": stats["device_steps"],
+        "sample_budget": stats["sample_budget"],
+        "budget_retraces": stats["budget_retraces"],
+        "slots": slots,
+        "slot_rays": slot_rays,
+        "psnr_serve": round(psnr_serve, 4),
+        "psnr_inprocess": round(psnr_inproc, 4),
+        "psnr_delta_db": round(abs(psnr_serve - psnr_inproc), 4),
+    }
+
+
+def _parse_bits(s: Optional[str], n_units: int) -> Optional[Sequence[int]]:
+    if not s:
+        return None
+    parts = [int(b) for b in s.split(",") if b]
+    if len(parts) == 1:
+        return [parts[0]] * n_units
+    if len(parts) != n_units:
+        raise SystemExit(
+            f"--bits needs 1 or {n_units} comma-separated values, got "
+            f"{len(parts)}"
+        )
+    return parts
+
+
+def serve_main(argv=None) -> int:
+    """Compile (or load) a QuantArtifact and drive the batched render
+    service against it."""
+    from repro.core.closed_loop import SceneScale, build_scene_env
+    from repro.hero.artifact import QuantArtifact, compile_artifact
+    from repro.nerf.dataset import make_dataset
+    from repro.nerf.scenes import SceneConfig
+
+    ap = argparse.ArgumentParser(
+        prog="hero-serve",
+        description="Request-batching NeRF render service over a compiled "
+                    "QuantArtifact",
+    )
+    ap.add_argument("--artifact", default=None,
+                    help="load this saved artifact directory instead of "
+                         "compiling from scratch")
+    ap.add_argument("--scene", default="chair")
+    ap.add_argument("--bits", default=None,
+                    help="policy bits: one value (uniform) or a full "
+                         "comma-separated vector; default uniform 8")
+    ap.add_argument("--quick", action="store_true",
+                    help="quick scene scale (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slot-rays", type=int, default=512)
+    ap.add_argument("--save", default=None,
+                    help="also save the compiled artifact to this directory")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    if args.artifact:
+        artifact = QuantArtifact.load(args.artifact)
+        # Rebuild the EXACT eval set the compile metrics were measured on
+        # (procedural scenes are deterministic) — parity vs
+        # metrics["psnr"] is meaningless on any other view set.
+        sc = dict(artifact.scene_cfg)
+        sc["light_dir"] = tuple(sc.get("light_dir", (0.5, -1.0, 0.6)))
+        ds = make_dataset(SceneConfig(**sc))
+        roundtrip = None  # already deployed bytes
+    else:
+        print(f"[hero-serve] compiling {args.scene!r} at "
+              f"{'quick' if args.quick else 'standard'} scale ...", flush=True)
+        env = build_scene_env(args.scene, scale, seed=args.seed)
+        artifact = compile_artifact(
+            env, _parse_bits(args.bits, env.n_units)
+        )
+        ds = env.dataset
+        roundtrip = args.save or f"experiments/artifacts/{args.scene}"
+
+    report = run_serve(
+        artifact, ds, n_requests=args.requests, slots=args.slots,
+        slot_rays=args.slot_rays, roundtrip_dir=roundtrip,
+    )
+    Path(args.out).write_text(json.dumps(report, indent=2))
+
+    lat = report["latency_ms"]
+    print(f"\n== hero-serve: {report['requests']} requests x "
+          f"{report['rays_per_request']} rays, scene={report['scene']} ==")
+    print(f"  requests/sec:   {report['requests_per_sec']}")
+    print(f"  rays/sec:       {report['rays_per_sec']}")
+    print(f"  latency ms:     p50={lat['p50']} p95={lat['p95']} "
+          f"mean={lat['mean']}")
+    print(f"  sample budget:  {report['sample_budget']} "
+          f"({report['budget_retraces']} retraces)")
+    print(f"  PSNR serve/in-process: {report['psnr_serve']:.4f} / "
+          f"{report['psnr_inprocess']:.4f} "
+          f"(delta {report['psnr_delta_db']:.4f} dB)")
+    print(f"  wrote {args.out}")
+    if roundtrip:
+        print(f"  artifact at {roundtrip}")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "search":
+        return search_main(argv[1:])
+    if argv and argv[0] == "serve":
+        return serve_main(argv[1:])
+    print("usage: python -m repro.hero.cli <search|serve> [args...]",
+          file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -348,6 +348,16 @@ class BatchedNeuRexSimulator:
     def cache_stats_memo_size(self) -> int:
         return len(self._memo)
 
+    def vmappable(self):
+        """Pure per-policy latency fn `(hb, wb, ab) -> metric dict` for
+        `jax.vmap` + shard_map (the `BatchedHardwareSim` protocol hook),
+        or None when the trace's coarse addresses exceed int32 — the
+        memoized host kernel is then the only exact path."""
+        if not self.tc.jax_addr_safe:
+            return None
+        tc, cfg, overlap = self.tc, self.cfg, self.pipeline_overlap
+        return lambda hb, wb, ab: policy_latency(hb, wb, ab, tc, cfg, overlap)
+
     def clear_stats_memo(self) -> None:
         """Drop memoized cache stats (benchmarking cold-path behaviour)."""
         self._memo.clear()

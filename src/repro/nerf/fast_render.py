@@ -593,7 +593,11 @@ class FastRenderEngine:
         budget: Optional[int] = None,
         use_pallas="auto",
         early_stop: bool = True,
+        pack: Optional[FusedPack] = None,
     ):
+        """`pack=` serves a prebuilt `FusedPack` verbatim (deployable
+        artifacts load their packed codes from disk); by default the pack
+        is quantized from (params, spec) at construction."""
         assert mode in ("reference", "fused"), mode
         self.params = params
         self.cfg = cfg
@@ -604,9 +608,9 @@ class FastRenderEngine:
         self.chunk = chunk
         self.use_pallas = use_pallas
         self.early_stop = early_stop
-        self.pack = (
-            build_fused_pack(params, cfg, self.spec) if mode == "fused" else None
-        )
+        if pack is None and mode == "fused":
+            pack = build_fused_pack(params, cfg, self.spec)
+        self.pack = pack if mode == "fused" else None
         self._budget = budget
         self._budget_cache: Dict[Tuple, int] = {}
 

@@ -1,0 +1,85 @@
+"""ParetoFrontier JSON round-trip: points, constraint sets, and exact
+hypervolume equality after reload (the closed loop's checkpoint/resume
+correctness rests on this)."""
+import json
+
+import pytest
+
+from repro.core.pareto import ConstraintSet, ParetoFrontier, ParetoPoint
+
+REF = (1.0, -5.0, 1.0)
+
+
+def _frontier() -> ParetoFrontier:
+    f = ParetoFrontier(constraints=ConstraintSet(
+        max_latency=1.0, min_psnr=-5.0, max_model_bytes=1.0,
+    ))
+    pts = [
+        ParetoPoint(latency=1.0, psnr=0.0, model_bytes=1.0,
+                    bits=(8, 8, 8), scene="chair", budget=1.0, reward=0.0),
+        ParetoPoint(latency=0.7, psnr=-1.5, model_bytes=0.6,
+                    bits=(6, 5, 7), scene="chair", budget=0.85, reward=0.4),
+        ParetoPoint(latency=0.5, psnr=-3.0, model_bytes=0.4,
+                    bits=(4, 4, 6), scene="lego", budget=0.85, reward=0.2),
+        # Dominated: must be rejected, not serialized.
+        ParetoPoint(latency=0.9, psnr=-2.0, model_bytes=0.9,
+                    bits=(7, 7, 7), scene="lego"),
+        # Infeasible under the constraints: silently dropped.
+        ParetoPoint(latency=2.0, psnr=1.0, model_bytes=0.1, bits=(1, 1, 1)),
+    ]
+    f.extend(pts)
+    return f
+
+
+def test_json_roundtrip_points_constraints_hypervolume(tmp_path):
+    f = _frontier()
+    path = tmp_path / "frontier.json"
+    f.save(path)
+
+    g = ParetoFrontier.load(path)
+    # Same constraint set ...
+    assert g.constraints == f.constraints
+    # ... same points, including every identity tag ...
+    assert [p.to_json() for p in g] == [p.to_json() for p in f]
+    assert g.objective_set() == f.objective_set()
+    # ... and the exact hypervolume is preserved bit-for-bit.
+    assert g.hypervolume(REF) == f.hypervolume(REF)
+    assert g.hypervolume() == f.hypervolume()
+    assert f.hypervolume(REF) > 0.0
+
+
+def test_roundtrip_through_dict_matches_file_path(tmp_path):
+    f = _frontier()
+    via_dict = ParetoFrontier.from_json(
+        json.loads(json.dumps(f.to_json()))
+    )
+    assert via_dict.objective_set() == f.objective_set()
+    assert via_dict.constraints == f.constraints
+
+
+def test_reloaded_frontier_keeps_enforcing_constraints(tmp_path):
+    f = _frontier()
+    path = tmp_path / "frontier.json"
+    f.save(path)
+    g = ParetoFrontier.load(path)
+    # Constraints survive as behavior, not just data.
+    assert not g.insert(
+        ParetoPoint(latency=3.0, psnr=2.0, model_bytes=0.05)
+    )
+    # A genuinely better feasible point still joins and evicts.
+    n_before = len(g)
+    assert g.insert(
+        ParetoPoint(latency=0.4, psnr=-1.0, model_bytes=0.3, bits=(5, 5, 5))
+    )
+    assert len(g) <= n_before + 1
+    assert g.hypervolume(REF) >= f.hypervolume(REF)
+
+
+def test_empty_frontier_roundtrip(tmp_path):
+    f = ParetoFrontier(constraints=ConstraintSet(min_psnr=-2.0))
+    path = tmp_path / "empty.json"
+    f.save(path)
+    g = ParetoFrontier.load(path)
+    assert len(g) == 0
+    assert g.constraints == ConstraintSet(min_psnr=-2.0)
+    assert g.hypervolume(REF) == 0.0
