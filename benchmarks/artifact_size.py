@@ -1,0 +1,213 @@
+"""Artifact size benchmark: is `model_bytes` real on disk?
+
+Compiles `QuantArtifact`s for a sweep of policies on the quick scene and
+writes ``BENCH_artifact.json``:
+
+  - stored payload bytes per policy (packed words + f32 carriers) vs the
+    legacy schema-1 store (int8 weight codes + float-carrier hash
+    tables) and vs a flat 1-byte-per-code int8 store;
+  - pack/unpack codec throughput (Melem/s, host->words->host);
+  - fused PSNR parity: compile -> save -> load -> evaluate vs the
+    in-process fused engine (must be identical — the loaded words ARE
+    the weights).
+
+The gate (always on — both metrics are deterministic, not
+machine-dependent): for the mixed 4-bit-MLP / 6-bit-hash policy the
+packed payload must be < 0.6x the schema-1 int8-stored size, and the
+roundtrip PSNR delta must stay inside the 1e-3 dB band. This is the CI
+fast lane's artifact step.
+
+Usage (repo root on the path for `benchmarks.*`):
+  PYTHONPATH=src:. python benchmarks/artifact_size.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+MAX_RATIO_VS_V1 = 0.6  # packed payload vs schema-1 stored bytes (mixed 4/6)
+PSNR_BAND_DB = 1e-3  # save -> load -> evaluate vs in-process fused
+
+
+def _pack_payload_bytes(pack, code_bytes_w, code_bytes_tab) -> int:
+    """Walk the pack's quantized payload once, charging `code_bytes_w` /
+    `code_bytes_tab` bytes per sub-byte CODE (weights / tables) and 4
+    bytes per element of any f32 carrier — one traversal parameterizes
+    every storage baseline this benchmark compares."""
+    from repro.quant.packing import PackedTensor
+
+    total = 0
+    for lyr in pack.layers.values():
+        if "wq" in lyr:
+            total += int(np.prod(lyr["wq"].shape) * code_bytes_w)
+        else:
+            total += int(np.size(lyr["w"])) * 4
+    for t in pack.hash_tables.values():
+        if isinstance(t, PackedTensor):
+            total += int(np.prod(t.shape) * code_bytes_tab)
+        else:
+            total += int(np.size(t)) * 4
+    return total
+
+
+def _v1_stored_bytes(pack) -> int:
+    """Legacy schema-1 store: int8 weight codes (1 byte/code; the
+    redundant f32 `w_deq` carrier is NOT counted — conservative) and f32
+    hash tables regardless of their bits."""
+    return _pack_payload_bytes(pack, code_bytes_w=1, code_bytes_tab=4)
+
+
+def _int8_code_bytes(pack) -> int:
+    """Flat 1-byte-per-code store for every quantized tensor (weights AND
+    tables as int8) — the tightest non-sub-byte baseline."""
+    return _pack_payload_bytes(pack, code_bytes_w=1, code_bytes_tab=1)
+
+
+def _codec_throughput(n: int = 1 << 18, bits: int = 4, reps: int = 5):
+    import jax.numpy as jnp
+
+    from repro.quant.packing import pack_codes, unpack_words
+
+    rng = np.random.RandomState(0)
+    q = rng.randint(0, 2**bits, size=(n,))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        pt = pack_codes(q, bits)
+        pt.words.block_until_ready()
+    t_pack = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        unpack_words(pt.words, bits, pt.shape).block_until_ready()
+    t_unpack = (time.perf_counter() - t0) / reps
+    return {
+        "elements": n,
+        "bits": bits,
+        "pack_melem_per_sec": round(n / t_pack / 1e6, 2),
+        "unpack_melem_per_sec": round(n / t_unpack / 1e6, 2),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--scene", default="chair")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_artifact.json")
+    args = ap.parse_args(argv)
+
+    from repro.core.closed_loop import SceneScale, build_scene_env
+    from repro.hero.artifact import QuantArtifact, compile_artifact
+    from repro.quant.policy import QuantPolicy
+
+    scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    print(f"[bench-artifact] training scene={args.scene} "
+          f"({'quick' if args.quick else 'standard'} scale) ...", flush=True)
+    env = build_scene_env(args.scene, scale, seed=args.seed)
+
+    def policy_bits(mlp: int, hash_: int):
+        return [
+            hash_ if u.name.startswith("hash/") else mlp for u in env.units
+        ]
+
+    sweeps = {
+        "uniform8": policy_bits(8, 8),
+        "uniform6": policy_bits(6, 6),
+        "uniform4": policy_bits(4, 4),
+        "mixed_4mlp_6hash": policy_bits(4, 6),
+    }
+
+    policies = {}
+    mixed_artifact = None
+    for name, bits in sweeps.items():
+        art = compile_artifact(env, bits)
+        stored = art.stored_model_bytes()
+        v1 = _v1_stored_bytes(art.pack)
+        i8 = _int8_code_bytes(art.pack)
+        sim = env.simulate_policy(
+            QuantPolicy.uniform(env.units, 8).with_bits(bits)
+        )
+        policies[name] = {
+            "stored_bytes": int(stored),
+            "frontier_model_bytes": float(sim.model_bytes),
+            "int8_v1_bytes": int(v1),
+            "int8_code_bytes": int(i8),
+            "ratio_vs_v1": round(stored / v1, 4),
+            "ratio_vs_int8_codes": round(stored / i8, 4),
+            "exact_vs_frontier": bool(stored == sim.model_bytes),
+        }
+        if name == "mixed_4mlp_6hash":
+            mixed_artifact = art
+        print(f"[bench-artifact]   {name}: {stored} B stored "
+              f"({policies[name]['ratio_vs_v1']:.3f}x of v1 store, "
+              f"{policies[name]['ratio_vs_int8_codes']:.3f}x of int8 codes)",
+              flush=True)
+
+    # Roundtrip parity on the gated (mixed) policy.
+    psnr_inproc = mixed_artifact.engine().evaluate_psnr(env.dataset)
+    with tempfile.TemporaryDirectory(prefix="hero_artifact_") as tmp:
+        mixed_artifact.save(Path(tmp) / "art")
+        loaded = QuantArtifact.load(Path(tmp) / "art")
+        psnr_loaded = loaded.engine().evaluate_psnr(env.dataset)
+    delta = abs(psnr_loaded - psnr_inproc)
+
+    mixed = policies["mixed_4mlp_6hash"]
+    report = {
+        "scale": "quick" if args.quick else "standard",
+        "scene": args.scene,
+        "seed": args.seed,
+        "policies": policies,
+        "codec": _codec_throughput(),
+        "psnr": {
+            "inprocess": round(float(psnr_inproc), 6),
+            "roundtrip": round(float(psnr_loaded), 6),
+            "delta_db": round(float(delta), 8),
+        },
+        "gate": {
+            "max_ratio_vs_v1": MAX_RATIO_VS_V1,
+            "psnr_band_db": PSNR_BAND_DB,
+            "ratio_vs_v1": mixed["ratio_vs_v1"],
+            "exact_vs_frontier": mixed["exact_vs_frontier"],
+        },
+    }
+    Path(args.out).write_text(json.dumps(report, indent=2))
+
+    print(f"\n== artifact size (mixed 4-bit MLP / 6-bit hash) ==")
+    print(f"  stored payload:  {mixed['stored_bytes']} B "
+          f"(frontier model_bytes {mixed['frontier_model_bytes']:.0f})")
+    print(f"  vs v1 store:     {mixed['ratio_vs_v1']:.3f}x "
+          f"(gate < {MAX_RATIO_VS_V1}x)")
+    print(f"  vs int8 codes:   {mixed['ratio_vs_int8_codes']:.3f}x")
+    print(f"  codec:           pack {report['codec']['pack_melem_per_sec']} "
+          f"/ unpack {report['codec']['unpack_melem_per_sec']} Melem/s")
+    print(f"  PSNR parity:     {psnr_inproc:.4f} vs {psnr_loaded:.4f} "
+          f"(delta {delta:.2e} dB)")
+    print(f"  wrote {args.out}")
+
+    # Gate (deterministic; the JSON is already on disk). Gate on the RAW
+    # ratio — the reported one is display-rounded.
+    ok = True
+    raw_ratio = mixed["stored_bytes"] / mixed["int8_v1_bytes"]
+    if raw_ratio >= MAX_RATIO_VS_V1:
+        print(f"[bench-artifact] SIZE GATE FAIL: {raw_ratio:.4f}x"
+              f" >= {MAX_RATIO_VS_V1}x of the int8-stored size",
+              file=sys.stderr)
+        ok = False
+    if not mixed["exact_vs_frontier"]:
+        print("[bench-artifact] EXACTNESS FAIL: stored bytes != frontier "
+              "model_bytes", file=sys.stderr)
+        ok = False
+    if delta > PSNR_BAND_DB:
+        print(f"[bench-artifact] PSNR PARITY FAIL: {delta:.6f} dB exceeds "
+              f"the {PSNR_BAND_DB} dB band", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

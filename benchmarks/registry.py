@@ -63,3 +63,8 @@ register(
     "hero.serve request-batching render service: requests/sec + latency "
     "percentiles (BENCH_serve.json)",
 )
+register(
+    "artifact_size", "benchmarks.artifact_size", "main",
+    "packed-artifact bytes by policy + codec throughput + roundtrip PSNR "
+    "parity gates (BENCH_artifact.json)",
+)

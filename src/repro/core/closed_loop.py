@@ -101,7 +101,10 @@ class SceneBundle:
     benv: BatchedQuantEnv
     baseline_latency: float  # all-8-bit cycles (env.original_cost)
     baseline_psnr: float  # all-8-bit PSNR through the proxy
-    baseline_bytes: float  # all-8-bit model size
+    # All-8-bit PACKED model size (shared size function in
+    # repro.quant.packing — equals an 8-bit artifact's stored bytes), the
+    # denominator of the joint frontier's size ratio.
+    baseline_bytes: float
 
     def baseline_point(self) -> ParetoPoint:
         return ParetoPoint(

@@ -10,7 +10,13 @@ search product (what an accelerator designer actually picks from, cf.
 FlexNeRFer / Gen-NeRF design-space sweeps).
 
 Objectives are fixed: latency (minimize), PSNR (maximize), model bytes
-(minimize). Cross-scene frontiers compare *normalized* objectives
+(minimize). `model_bytes` is the PACKED payload size: every simulator
+feeding this frontier computes it through the shared size function in
+`repro.quant.packing` (bit-plane words for <= 8-bit units, f32 carriers
+above), which is byte-identical to what a compiled `QuantArtifact`
+stores on disk for the same policy — the search objective IS the shipped
+artifact size, not an analytic proxy. Cross-scene frontiers compare
+*normalized* objectives
 (latency ratio and PSNR delta against that scene's all-8-bit baseline)
 so points from scenes of different intrinsic difficulty live on one
 surface; `ParetoPoint.scene`/`budget` tags keep provenance.

@@ -9,15 +9,27 @@ render service needs to serve the scene without the training stack:
   - the finetuned float parameters (reference mode / re-packing);
   - the policy bits + calibration ranges (the quant spec is re-derived
     deterministically on load — one source of truth);
-  - the packed `FusedPack` int8 weight codes + scales + fake-quantized
-    hash tables (loaded verbatim, not rebuilt: the bundle IS the deploy
-    format);
+  - the packed `FusedPack`: SUB-BYTE weight code words and integer
+    hash-table code words (`repro.quant.packing.PackedTensor` bit-plane
+    layout) + scales (loaded verbatim, not rebuilt: the bundle IS the
+    deploy format, and a 4-bit policy ships 4-bit payloads);
   - the baked occupancy grid (empty-space culling at serve time);
-  - hardware-target metadata + predicted latency/model-size/PSNR.
+  - hardware-target metadata + latency/model-size/PSNR at compile, with
+    `model_bytes` MEASURED from the stored payload bytes — by the shared
+    size function, exactly the frontier's model_bytes for the policy.
 
 `save`/`load` use one directory: `arrays.npz` + `manifest.json` with
 per-array sha256 and a schema version — corrupt or truncated bundles fail
 loudly, the same auditability contract as `repro.checkpoint`.
+
+Schema v2 stores packed words (`...::pt::words/scale/offset` triplets
+described by the manifest's `packed_tensors` map). A v1 directory (int8
+weight codes + float-carrier hash tables) still loads: integrity checks
+run against ITS manifest first, then the pack is rebuilt from the
+finetuned params + policy bits through the same deterministic
+`build_fused_pack` path — the in-memory object is a full v2 artifact
+(saving it writes v2) and serves at the PSNR a v2 compile of the same
+params produces.
 """
 from __future__ import annotations
 
@@ -26,12 +38,17 @@ import hashlib
 import json
 import os
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nerf.fast_render import FastRenderEngine, FusedPack, build_fused_pack
+from repro.nerf.fast_render import (
+    FastRenderEngine,
+    FusedPack,
+    build_fused_pack,
+    fused_pack_stored_bytes,
+)
 from repro.nerf.hash_encoding import HashEncodingConfig
 from repro.nerf.ngp import (
     NGPConfig,
@@ -41,9 +58,10 @@ from repro.nerf.ngp import (
 )
 from repro.nerf.occupancy import OccupancyGrid, bake_occupancy_cached
 from repro.nerf.render import RenderConfig
+from repro.quant.packing import PackedTensor
 from repro.quant.policy import QuantPolicy
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 # npz key separator: parameter names themselves contain "/" ("sigma/0"),
 # so nesting is encoded with a separator that cannot appear in names.
 _SEP = "::"
@@ -86,30 +104,56 @@ class QuantArtifact:
             pack=self.pack, **kw,
         )
 
+    def stored_model_bytes(self) -> int:
+        """Exact bytes of the quantized model payload as stored on disk
+        (packed weight/table words + any f32 carriers) — the number
+        `metrics["model_bytes"]` records and the frontier's shared size
+        function predicts."""
+        return fused_pack_stored_bytes(self.pack)
+
     # ------------------------------------------------------------------
     # Serialization
     # ------------------------------------------------------------------
-    def _arrays(self) -> Dict[str, np.ndarray]:
+    def _arrays(self) -> Tuple[Dict[str, np.ndarray], Dict[str, Dict]]:
+        """-> (flat array dict, packed-tensor static metadata by prefix).
+
+        A `PackedTensor` value at logical key K becomes three arrays
+        (K::pt::words / K::pt::scale / K::pt::offset); its static (bits,
+        shape) ride in the manifest's `packed_tensors[K]`."""
         out: Dict[str, np.ndarray] = {"act_ranges": np.asarray(self.act_ranges)}
+        packed: Dict[str, Dict] = {}
+
+        def emit(key, v):
+            if isinstance(v, PackedTensor):
+                out[f"{key}{_SEP}pt{_SEP}words"] = np.asarray(v.words)
+                out[f"{key}{_SEP}pt{_SEP}scale"] = np.asarray(v.scale)
+                out[f"{key}{_SEP}pt{_SEP}offset"] = np.asarray(v.offset)
+                packed[key] = {
+                    "bits": int(v.bits), "shape": [int(s) for s in v.shape]
+                }
+            else:
+                out[key] = np.asarray(v)
+
         for top, sub in self.params.items():
             for k, v in sub.items():
                 out[f"params{_SEP}{top}{_SEP}{k}"] = np.asarray(v)
         for name, lyr in self.pack.layers.items():
             for k, v in lyr.items():
-                out[f"pack{_SEP}{name}{_SEP}{k}"] = np.asarray(v)
+                emit(f"pack{_SEP}{name}{_SEP}{k}", v)
         for name, t in self.pack.hash_tables.items():
-            out[f"packtab{_SEP}{name}"] = np.asarray(t)
+            emit(f"packtab{_SEP}{name}", t)
         out["occ"] = np.asarray(self.occ.occ)
-        return out
+        return out, packed
 
     def save(self, path) -> Path:
         """Write the bundle to directory `path` (npz first, manifest last,
         both via tmp + rename so a crash never leaves a loadable lie)."""
         path = Path(path)
         path.mkdir(parents=True, exist_ok=True)
-        arrays = self._arrays()
+        arrays, packed_meta = self._arrays()
         manifest = {
-            "schema_version": self.schema_version,
+            "schema_version": SCHEMA_VERSION,
+            "packed_tensors": packed_meta,
             "scene": self.scene,
             "bits": [int(b) for b in self.bits],
             "cfg": dataclasses.asdict(self.cfg),
@@ -143,6 +187,10 @@ class QuantArtifact:
 
     @staticmethod
     def load(path) -> "QuantArtifact":
+        """Load a saved bundle. Integrity (array-set match + per-array
+        sha256 against the directory's OWN manifest) is verified for every
+        schema version before any reconstruction; a v1 directory is then
+        auto-upgraded in memory (module docstring)."""
         path = Path(path)
         manifest = json.loads((path / "manifest.json").read_text())
         version = int(manifest.get("schema_version", -1))
@@ -170,17 +218,37 @@ class QuantArtifact:
         cfg = NGPConfig(hash=HashEncodingConfig(**cfg_d.pop("hash")), **cfg_d)
         rcfg = RenderConfig(**manifest["rcfg"])
 
+        packed_meta = manifest.get("packed_tensors", {})
+
+        def take_packed(prefix: str) -> PackedTensor:
+            meta = packed_meta[prefix]
+            return PackedTensor(
+                words=jnp.asarray(arrays[f"{prefix}{_SEP}pt{_SEP}words"]),
+                scale=jnp.asarray(arrays[f"{prefix}{_SEP}pt{_SEP}scale"]),
+                offset=jnp.asarray(arrays[f"{prefix}{_SEP}pt{_SEP}offset"]),
+                bits=int(meta["bits"]),
+                shape=tuple(int(s) for s in meta["shape"]),
+            )
+
         params: Dict[str, Dict] = {}
         layers: Dict[str, Dict] = {}
         tables: Dict[str, jnp.ndarray] = {}
         for k, v in arrays.items():
             parts = k.split(_SEP)
+            if len(parts) >= 2 and parts[-2] == "pt":
+                continue  # component of a PackedTensor, handled below
             if parts[0] == "params":
                 params.setdefault(parts[1], {})[parts[2]] = jnp.asarray(v)
             elif parts[0] == "pack":
                 layers.setdefault(parts[1], {})[parts[2]] = jnp.asarray(v)
             elif parts[0] == "packtab":
                 tables[parts[1]] = jnp.asarray(v)
+        for prefix in packed_meta:
+            parts = prefix.split(_SEP)
+            if parts[0] == "pack":
+                layers.setdefault(parts[1], {})[parts[2]] = take_packed(prefix)
+            elif parts[0] == "packtab":
+                tables[parts[1]] = take_packed(prefix)
 
         occ_meta = manifest["occ"]
         occ = OccupancyGrid(
@@ -189,22 +257,41 @@ class QuantArtifact:
             threshold=float(occ_meta["threshold"]),
             occupied_fraction=float(occ_meta["occupied_fraction"]),
         )
+        bits = [int(b) for b in manifest["bits"]]
+        act_ranges = jnp.asarray(arrays["act_ranges"])
+        metrics = dict(manifest["metrics"])
+
+        if version == 1:
+            # v1 auto-upgrade: the stored pack is the legacy int8/f32
+            # form (int8 w_codes + f32 w_deq + float-carrier tables).
+            # Re-pack from the verified finetuned params through the SAME
+            # deterministic build path a v2 compile uses — identical
+            # codes, identical served PSNR — and re-measure model_bytes
+            # from what v2 actually stores.
+            units = make_quant_units(cfg)
+            policy = QuantPolicy.uniform(units, 8).with_bits(bits)
+            spec = spec_from_policy(cfg, policy, act_ranges)
+            pack = build_fused_pack(params, cfg, spec)
+            metrics["model_bytes"] = float(fused_pack_stored_bytes(pack))
+        else:
+            pack = FusedPack(
+                layers=layers, hash_tables=tables,
+                modes=tuple(manifest["pack_modes"]),
+            )
+
         return QuantArtifact(
             scene=manifest["scene"],
-            bits=[int(b) for b in manifest["bits"]],
+            bits=bits,
             cfg=cfg,
             rcfg=rcfg,
             scene_cfg=dict(manifest["scene_cfg"]),
             params=params,
-            act_ranges=jnp.asarray(arrays["act_ranges"]),
-            pack=FusedPack(
-                layers=layers, hash_tables=tables,
-                modes=tuple(manifest["pack_modes"]),
-            ),
+            act_ranges=act_ranges,
+            pack=pack,
             occ=occ,
             hardware=manifest["hardware"],
-            metrics=manifest["metrics"],
-            schema_version=version,
+            metrics=metrics,
+            schema_version=SCHEMA_VERSION,
         )
 
 
@@ -247,6 +334,11 @@ def compile_artifact(
             env.params, env.cfg, resolution=env.ecfg.occ_resolution,
             threshold=env.ecfg.occ_threshold,
         )
+    pack = build_fused_pack(ft_params, env.cfg, spec)
+    # MEASURED payload bytes. The simulator's model_bytes goes through the
+    # same shared size function (`repro.quant.packing`), so the two are
+    # equal — pinned by tests — but the artifact records what it stores.
+    model_bytes = fused_pack_stored_bytes(pack)
     return QuantArtifact(
         scene=env.scene_name,
         bits=bits,
@@ -255,13 +347,13 @@ def compile_artifact(
         scene_cfg=dataclasses.asdict(env.dataset.cfg),
         params=ft_params,
         act_ranges=env.act_ranges,
-        pack=build_fused_pack(ft_params, env.cfg, spec),
+        pack=pack,
         occ=occ,
         hardware=env.target.describe(),
         metrics={
             "psnr": float(psnr),
             "latency_cycles": float(lat.total_cycles),
-            "model_bytes": float(lat.model_bytes),
+            "model_bytes": float(model_bytes),
             "fqr": float(policy.fqr()),
             "finetune_steps": int(steps),
         },

@@ -38,6 +38,7 @@ from repro.hwsim import HWConfig, NeuRexSimulator, build_trace
 from repro.hwsim.cache import CacheStats
 from repro.hwsim.neurex import LatencyBreakdown
 from repro.hwsim.trace import NGPTrace
+from repro.quant.packing import policy_model_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -226,16 +227,22 @@ def _roofline_metrics(
     Every output derives from the inputs (no constant leaves) so sharded
     outputs all carry the population axis."""
     P = float(consts.n_points)
-    le = jnp.asarray(consts.level_entries, jnp.float32)
     d_in = jnp.asarray(consts.d_in, jnp.float32)
     d_out = jnp.asarray(consts.d_out, jnp.float32)
     F = float(consts.n_features)
 
     # --- memory side: model stream + per-sample feature/activation traffic
-    model_bits = jnp.sum(le * F * hash_bits) + jnp.sum(d_in * d_out * w_bits)
+    # The model stream is the PACKED payload (shared size function,
+    # repro.quant.packing): what a deployed artifact actually moves
+    # through DRAM, which is also the frontier's model_bytes objective.
+    model_bytes = policy_model_bytes(
+        [int(e) for e in consts.level_entries], int(F),
+        list(zip(consts.d_in.astype(int), consts.d_out.astype(int))),
+        hash_bits, w_bits, xp=jnp,
+    )
     lookup_bits = P * 8.0 * jnp.sum(F * hash_bits)  # 8 corners per level
     act_bits = P * jnp.sum((d_in + d_out) * a_bits)
-    mem_bytes = (model_bits + lookup_bits + act_bits) / 8.0
+    mem_bytes = model_bytes + (lookup_bits + act_bits) / 8.0
     mem_cycles = mem_bytes / hw.bytes_per_cycle
 
     # --- compute side: precision-scaled MACs over the lane array
@@ -245,14 +252,14 @@ def _roofline_metrics(
     total = jnp.maximum(mem_cycles, compute_cycles)
     zero = jnp.sum(hash_bits) * 0.0  # policy-shaped zero (see docstring)
     return {
-        "lookup_cycles": mem_cycles - (model_bits / 8.0) / hw.bytes_per_cycle,
+        "lookup_cycles": mem_cycles - model_bytes / hw.bytes_per_cycle,
         "grid_miss_cycles": zero,
         "subgrid_prefetch_cycles": zero,
         "encode_cycles": mem_cycles,
         "mlp_compute_cycles": compute_cycles,
         "total_cycles": total,
         "cycles_per_ray": total / max(consts.n_rays, 1),
-        "model_bytes": model_bits / 8.0,
+        "model_bytes": model_bytes,
         "dram_bytes": mem_bytes,
         "grid_accesses": zero,
         "grid_hits": zero.astype(jnp.int32),

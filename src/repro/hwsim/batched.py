@@ -34,6 +34,7 @@ from repro.hwsim.cache import direct_mapped_stats, simulate_direct_mapped
 from repro.hwsim.config import HWConfig
 from repro.hwsim.systolic import mlp_cycles_jnp
 from repro.hwsim.trace import NGPTrace
+from repro.quant.packing import policy_model_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -269,11 +270,13 @@ def _compose_latency(
     total = hi + (1.0 - pipeline_overlap) * lo
 
     # --- Model size under this policy --------------------------------------
-    d_in = jnp.asarray([d for d, _ in tc.mlp_dims], jnp.float32)
-    d_out = jnp.asarray([d for _, d in tc.mlp_dims], jnp.float32)
-    model_bits = jnp.sum(
-        tc.level_entries.astype(jnp.float32) * tc.n_features * hash_bits
-    ) + jnp.sum(d_in * d_out * w_bits)
+    # Shared packed-size function (repro.quant.packing): the jnp-traced
+    # twin of the numpy oracle's call — vmap/shard_map-safe, and equal to
+    # the bytes a compiled QuantArtifact stores for the same policy.
+    model_bytes = policy_model_bytes(
+        [int(e) for e in tc.level_entries], tc.n_features, tc.mlp_dims,
+        hash_bits, w_bits, xp=jnp,
+    )
 
     return {
         "lookup_cycles": jnp.float32(tc.lookup_cycles),
@@ -283,7 +286,7 @@ def _compose_latency(
         "mlp_compute_cycles": mlp_total,
         "total_cycles": total,
         "cycles_per_ray": total / max(tc.n_rays, 1),
-        "model_bytes": model_bits / 8.0,
+        "model_bytes": model_bytes,
         "dram_bytes": miss_bytes + prefetch_bytes,
         "grid_accesses": accesses,
         "grid_hits": hits,

@@ -33,6 +33,7 @@ from repro.hwsim.cache import CacheStats, simulate_direct_mapped
 from repro.hwsim.config import HWConfig
 from repro.hwsim.systolic import mlp_cycles
 from repro.hwsim.trace import NGPTrace
+from repro.quant.packing import policy_model_bytes
 
 
 @dataclasses.dataclass
@@ -255,12 +256,13 @@ class NeuRexSimulator:
         total = hi + (1.0 - self.pipeline_overlap) * lo
 
         # --- Model size under this policy ------------------------------------
-        model_bits = 0.0
-        for l in range(n_levels):
-            model_bits += trace.level_entries[l] * n_features * hash_bits[l]
-        for (d_in, d_out), wb in zip(trace.mlp_dims, w_bits):
-            model_bits += d_in * d_out * wb
-        model_bytes = model_bits / 8.0
+        # The shared packed-size function (repro.quant.packing): bytes the
+        # sub-byte artifact ACTUALLY stores, not the analytic n*b/8 — so
+        # the frontier objective equals the shipped payload exactly.
+        model_bytes = float(policy_model_bytes(
+            trace.level_entries, n_features, trace.mlp_dims,
+            hash_bits, w_bits, xp=np,
+        ))
 
         return LatencyBreakdown(
             lookup_cycles=lookup_cycles,

@@ -23,7 +23,10 @@ from repro.kernels.flash_attention_kernel import (
     flash_attention as _flash_pallas,
 )
 from repro.kernels.hash_encoding_kernel import hash_gather as _hash_pallas
-from repro.kernels.quant_matmul import quant_matmul as _qmm_pallas
+from repro.kernels.quant_matmul import (
+    quant_matmul as _qmm_pallas,
+    quant_matmul_packed as _qmm_packed_pallas,
+)
 
 
 def _resolve(use_pallas):
@@ -38,6 +41,20 @@ def quant_matmul(x_codes, w_codes, sx, sw, zx, use_pallas="auto", **kw):
         return ref.quant_matmul_ref(x_codes, w_codes, sx, sw, zx)
     return _qmm_pallas(
         x_codes, w_codes, sx, sw, zx,
+        interpret=interpret and not _on_tpu(), **kw,
+    )
+
+
+def quant_matmul_packed(x_codes, wq, sx, sw, zx, use_pallas="auto", **kw):
+    """`quant_matmul` over a sub-byte `PackedTensor` weight operand
+    (`repro.quant.packing`). The Pallas path expands packed tiles to
+    int8-range codes inside the kernel (unpack-on-load); the reference
+    unpacks with the pure-jnp codec and reuses `quant_matmul_ref`."""
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.quant_matmul_packed_ref(x_codes, wq, sx, sw, zx)
+    return _qmm_packed_pallas(
+        x_codes, wq.words, wq.offset, sx, sw, zx, bits=wq.bits,
         interpret=interpret and not _on_tpu(), **kw,
     )
 

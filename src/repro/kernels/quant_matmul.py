@@ -14,6 +14,13 @@ tiles — the standard Pallas matmul schedule, MXU-aligned (128) tiles.
 Prefer `repro.kernels.ops.quant_matmul` (the canonical entry): it adds the
 pure-jnp reference fallback. This raw entry auto-detects `interpret`
 (compiled on TPU, interpret-mode elsewhere) when left at None.
+
+`quant_matmul_packed` is the unpack-on-load variant: the weight operand
+arrives as sub-byte bit-plane words (`repro.quant.packing` layout) and
+each K-tile is expanded to int8-range codes INSIDE the kernel before the
+MXU dot — the weight stream through HBM/VMEM is the packed bytes, not an
+int8 inflation. bk=128 keeps tiles group-aligned (128 * bits is always a
+multiple of 32), so a tile's words are self-contained.
 """
 from __future__ import annotations
 
@@ -102,5 +109,129 @@ def quant_matmul(
         jnp.asarray(sx, jnp.float32).reshape(1, 1),
         jnp.asarray(sw, jnp.float32).reshape(1, 1),
         jnp.asarray(zx, jnp.int32).reshape(1, 1),
+    )
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight variant: sub-byte words in, int8 codes inside the kernel.
+# ---------------------------------------------------------------------------
+def _unpack_tile(words, bits: int, bk: int):
+    """Bit-plane words ((bk//32)*bits, bn) -> unsigned codes (bk, bn).
+
+    Per 32-row group: broadcast each plane word across its 32 code rows,
+    shift by the in-group row index, mask the bit, accumulate planes.
+    Broadcast + 2-D iota + elementwise shift/and/or only — no gathers, no
+    sublane reshapes — so the expansion lowers on the VPU and runs
+    unchanged in interpret mode.
+    """
+    n_groups = bk // 32
+    bn = words.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (32, bn), 0)
+    blocks = []
+    for g in range(n_groups):
+        u_g = jnp.zeros((32, bn), jnp.int32)
+        for p in range(bits):
+            plane = words[g * bits + p : g * bits + p + 1, :]  # (1, bn)
+            u_g = u_g | (
+                ((jnp.broadcast_to(plane, (32, bn)) >> pos) & 1) << p
+            )
+        blocks.append(u_g)
+    return jnp.concatenate(blocks, axis=0)  # (bk, bn)
+
+
+def _qmm_packed_kernel(
+    x_ref, w_ref, sx_ref, sw_ref, zx_ref, off_ref, o_ref, acc_ref,
+    *, n_k, bits, bk, k_rows,
+):
+    """Packed-weight version of `_qmm_kernel`: identical accumulation
+    algebra, but the weight tile is expanded from bit-plane words first.
+    Rows past the true K are forced to code 0 so zero-padded K tiles
+    contribute nothing to either the product or the wsum correction
+    (padded words decode to offset garbage, not 0 — the mask, not the
+    padding, owns that invariant). Codes clip to the int8 MXU range: only
+    the paper-exact 8-bit grid's -129 level can clamp (one LSB), exactly
+    as the unpacked int8 path clamps at build time.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    u = _unpack_tile(w_ref[...], bits, bk)
+    q = u + off_ref[0, 0]
+    row = jax.lax.broadcasted_iota(jnp.int32, q.shape, 0) + k * bk
+    q = jnp.where(row < k_rows, q, 0)
+    w = jnp.clip(q, -128, 127)
+    prod = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    wsum = jnp.sum(w, axis=0, keepdims=True)  # (1, bn)
+    acc_ref[...] += prod - zx_ref[0, 0] * wsum
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * sx_ref[0, 0] * sw_ref[0, 0]
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret")
+)
+def quant_matmul_packed(
+    x_codes: jnp.ndarray,  # (M, K) int8 activation codes
+    w_words: jnp.ndarray,  # (ceil(K/32)*bits, N) int32 bit-plane words
+    w_offset: jnp.ndarray,  # scalar int32 code offset (q = u + offset)
+    sx: jnp.ndarray,  # scalar f32 activation scale
+    sw: jnp.ndarray,  # scalar f32 weight scale
+    zx: jnp.ndarray,  # scalar int32 activation zero point
+    bits: int = 8,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """f32 (M, N) = ((x - zx) @ unpack(w)) * sx * sw, weights packed."""
+    interpret = resolve_interpret(interpret)
+    assert bk % 32 == 0, bk
+    M, K = x_codes.shape
+    wr, N = w_words.shape
+    groups = -(-K // 32)
+    assert wr == groups * bits, (w_words.shape, K, bits)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x_codes, ((0, pm), (0, pk)))
+    wr_full = ((K + pk) // 32) * bits
+    wp = jnp.pad(w_words, ((0, wr_full - wr), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    n_k = Kp // bk
+    wrows = (bk // 32) * bits
+
+    out = pl.pallas_call(
+        functools.partial(
+            _qmm_packed_kernel, n_k=n_k, bits=bits, bk=bk, k_rows=K
+        ),
+        grid=(Mp // bm, Np // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((wrows, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(
+        xp,
+        wp,
+        jnp.asarray(sx, jnp.float32).reshape(1, 1),
+        jnp.asarray(sw, jnp.float32).reshape(1, 1),
+        jnp.asarray(zx, jnp.int32).reshape(1, 1),
+        jnp.asarray(w_offset, jnp.int32).reshape(1, 1),
     )
     return out[:M, :N]

@@ -18,6 +18,14 @@ def quant_matmul_ref(x_codes, w_codes, sx, sw, zx) -> jnp.ndarray:
     )
 
 
+def quant_matmul_packed_ref(x_codes, wq, sx, sw, zx) -> jnp.ndarray:
+    """Packed-weight oracle: unpack the bit-plane words to signed codes
+    (`repro.quant.packing.PackedTensor`), clip to the int8 MXU range the
+    kernel enforces, and reuse the exact integer semantics above."""
+    q = jnp.clip(wq.codes(), -128, 127)
+    return quant_matmul_ref(x_codes, q, sx, sw, zx)
+
+
 def alpha_composite_ref(sigma, rgb, delta):
     """color (R,3), acc (R,1) via exclusive-cumprod transmittance."""
     alpha = 1.0 - jnp.exp(-sigma * delta)  # (R, S)

@@ -30,6 +30,7 @@ from repro.nerf.fast_render import (
     build_fused_pack,
     fast_render_rays,
     fused_ngp_apply,
+    fused_pack_stored_bytes,
 )
 
 __all__ = [
@@ -42,6 +43,7 @@ __all__ = [
     "build_fused_pack",
     "fast_render_rays",
     "fused_ngp_apply",
+    "fused_pack_stored_bytes",
     "HashEncodingConfig",
     "init_hash_tables",
     "hash_encode",

@@ -14,16 +14,31 @@ batched env's PSNR proxy — rebuilt around three ideas:
    geometry and the frozen grid, never on params or the policy). Ad-hoc
    rays fall back to an on-device cumsum compaction.
 2. **Real integer inference** (`mode="fused"`): a `FusedPack` precomputes
-   int8 weight codes per linear layer and fake-quantized hash tables;
-   activations are quantized to integer codes on the fly and the five NGP
-   linears lower through `kernels.ops.quant_matmul` (int8 codes + int32
-   MXU accumulation), the hash lookups through `kernels.ops.hash_gather`.
-   On backends without an int8 matmul unit (CPU), the same codes run on a
-   float carrier — identical quantization grid, f32 accumulation — because
+   sub-byte PACKED weight codes per linear layer and packed integer
+   hash-table codes (`repro.quant.packing.PackedTensor` — b-bit payloads
+   bit-packed into int32 words, so a 4-bit policy stores 4-bit weights,
+   not an int8 or float inflation); activations are quantized to integer
+   codes on the fly and the five NGP linears lower through
+   `kernels.ops.quant_matmul_packed` (packed words expanded to int8 codes
+   inside the kernel + int32 MXU accumulation), the hash lookups through
+   `kernels.ops.hash_gather` over the dequantized codes. On backends
+   without an int8 matmul unit (CPU), the same codes run on a float
+   carrier — identical quantization grid, f32 accumulation — because
    XLA's int32 dot is ~2.5x slower than f32 there; `use_pallas=True`
    forces the integer kernels everywhere (the parity tests do).
    `mode="reference"` keeps fake-quant `ngp_apply` as the oracle inside
    the same culled pipeline.
+
+   **The one-LSB clamp edge.** The paper-exact symmetric grid (Eq. 5,
+   q_min = -2^(b-1) - 1) spans 2^b + 1 levels — one more than a b-bit
+   payload can hold. `pack_codes` stores the top-exact window
+   [max(q) - 2^b + 1, max(q)]: a weight or hash tensor whose codes use
+   the FULL span clamps its single lowest level up by one LSB; all other
+   tensors (including any near-symmetric distribution) round-trip
+   exactly. This generalizes the old int8 path's b = 8 note (codes at
+   -129 clamping to -128): the deployable payload IS the truth, so the
+   serve path and the in-process fused path agree bit-for-bit at every
+   width, and the fake-quant oracle differs only on full-span tensors.
 3. **Device-resident frames**: full-frame evaluation stages the test set
    on device once, then runs ONE jitted call per evaluation — `lax.map`
    over ray chunks with squared error reduced on device — so a single
@@ -47,7 +62,7 @@ from repro.kernels.backend import on_tpu
 from repro.kernels.ops import (
     alpha_composite as ops_alpha_composite,
     hash_gather as ops_hash_gather,
-    quant_matmul as ops_quant_matmul,
+    quant_matmul_packed as ops_quant_matmul_packed,
 )
 from repro.nerf.hash_encoding import level_corner_data
 from repro.nerf.ngp import (
@@ -70,21 +85,29 @@ from repro.quant.linear_quant import (
     quantize_weight,
     weight_qparams,
 )
+from repro.quant.packing import PackedTensor, pack_codes
 
 # ---------------------------------------------------------------------------
 # FusedPack: host-built integer inference parameters for ONE concrete policy.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class FusedPack:
-    """Per-layer integer codes + scales, and fake-quantized hash tables.
+    """Per-layer packed integer codes + scales, and packed hash tables.
 
     `modes[i]` (static) selects the lowering of linear layer i:
-      "int"        — integer activation/weight codes through `quant_matmul`
-                     (float carrier off-TPU, same grid — module docstring);
-      "float_qact" — f32 matmul on pre-fake-quantized weights, activations
-                     fake-quantized on the fly (bits outside the int8
-                     range, e.g. the 9..15 band);
-      "float"      — plain f32 matmul (>= 16-bit sentinel on both sides).
+      "int"        — packed weight codes + on-the-fly activation codes
+                     through `quant_matmul_packed` (float carrier off-TPU,
+                     same grid — module docstring);
+      "float_qact" — f32 matmul, activations fake-quantized on the fly
+                     (activation bits in the 9..15 band);
+      "float"      — f32 matmul, activations untouched (>= 16 sentinel).
+
+    Weight STORAGE is orthogonal to the mode and depends only on the
+    weight bits: `wq` (a sub-byte `PackedTensor`) for bits <= 8, a
+    fake-quantized f32 `w` for the 9..15 band, the raw f32 `w` at the
+    >= 16 sentinel. Hash tables likewise: `PackedTensor` integer codes +
+    scale for bits <= 8 (the bits actually shrink the pack), f32 carriers
+    above. `fused_pack_stored_bytes` measures exactly these payloads.
     """
 
     layers: Dict[str, Dict[str, jnp.ndarray]]
@@ -97,18 +120,29 @@ jax.tree_util.register_dataclass(
 )
 
 
+def _pack_weight(w, bits: float, paper_exact: bool) -> PackedTensor:
+    """Quantize one weight/table tensor and bit-pack its codes (b <= 8).
+
+    The code offset is the top-exact window: only a tensor using the full
+    2^b + 1 paper-exact span clamps, by one LSB at q_min (module
+    docstring, "the one-LSB clamp edge")."""
+    qp = weight_qparams(jnp.min(w), jnp.max(w), bits, paper_exact=paper_exact)
+    return pack_codes(quantize_weight(w, qp), int(round(bits)), scale=qp.scale)
+
+
 def build_fused_pack(
     params: Dict, cfg: NGPConfig, spec: Optional[NGPQuantSpec] = None
 ) -> FusedPack:
-    """Lower a (params, spec) pair to integer inference form.
+    """Lower a (params, spec) pair to packed integer inference form.
 
     Requires a CONCRETE spec (host floats, not tracers): the bit widths
-    pick the lowering per layer at build time. The int8 codes fed to
-    `quant_matmul` are clamped to the MXU range [-128, 127]; the
-    paper-exact grid's extra -2^(b-1)-1 level only exceeds that at b = 8,
-    where codes that hit it clamp by one LSB (the float carrier `w_deq`
-    keeps the exact unclamped grid, so the default off-TPU path matches
-    the fake-quant oracle to roundoff).
+    pick the lowering per layer at build time, and the packing windows
+    need host min/max. Codes fed to the MXU clip to [-128, 127]; packed
+    storage additionally clamps full-span tensors by one LSB at q_min
+    (the paper-exact grid's extra -2^(b-1)-1 level — module docstring).
+    The float carrier dequantizes the SAME stored codes, so off-TPU and
+    kernel paths — and anything loaded from a saved artifact — share one
+    set of weights bit-for-bit.
     """
     if spec is None:
         spec = no_quant_spec(cfg)
@@ -124,49 +158,83 @@ def build_fused_pack(
         w, b = params[name]["w"], params[name]["b"]
         wbi, abi = float(wb[i]), float(ab[i])
         lo, hi = float(ar[i, 0]), float(ar[i, 1])
-        if wbi <= 8.0 and abi <= 8.0:
+
+        # Weight storage: packed codes / fake-quant f32 / raw f32.
+        if wbi <= 8.0:
+            store = dict(wq=_pack_weight(w, wbi, pe))
+        elif wbi < 16.0:
             qp_w = weight_qparams(jnp.min(w), jnp.max(w), wbi, paper_exact=pe)
+            store = dict(w=fake_quant_weight(w, qp_w))
+        else:
+            store = dict(w=w)
+
+        if wbi <= 8.0 and abi <= 8.0:
             qp_a = activation_qparams(lo, hi, abi)
             off = 2.0 ** (abi - 1.0)  # shift codes [0, 2^b-1] into int8
-            w_codes = quantize_weight(w, qp_w)
             layers[name] = dict(
-                w_codes=jnp.clip(w_codes, -128, 127).astype(jnp.int8),
-                w_deq=(w_codes * qp_w.scale).astype(jnp.float32),
+                store,
                 b=b,
                 sx=jnp.asarray(qp_a.scale, jnp.float32),
-                sw=jnp.asarray(qp_w.scale, jnp.float32),
                 zx=jnp.asarray(qp_a.zero_point - off, jnp.int32),
                 zx_f=jnp.asarray(qp_a.zero_point, jnp.float32),
                 qmax=jnp.asarray(qp_a.q_max, jnp.float32),
                 off=jnp.asarray(off, jnp.float32),
             )
             modes.append("int")
+        elif abi < 16.0:
+            qp_a = activation_qparams(lo, hi, abi)
+            layers[name] = dict(
+                store, b=b,
+                sx=jnp.asarray(qp_a.scale, jnp.float32),
+                zx_f=jnp.asarray(qp_a.zero_point, jnp.float32),
+                qmax=jnp.asarray(qp_a.q_max, jnp.float32),
+            )
+            modes.append("float_qact")
         else:
-            if wbi < 16.0:
-                qp_w = weight_qparams(jnp.min(w), jnp.max(w), wbi, paper_exact=pe)
-                w = fake_quant_weight(w, qp_w)
-            if abi < 16.0:
-                qp_a = activation_qparams(lo, hi, abi)
-                layers[name] = dict(
-                    w=w, b=b,
-                    sx=jnp.asarray(qp_a.scale, jnp.float32),
-                    zx_f=jnp.asarray(qp_a.zero_point, jnp.float32),
-                    qmax=jnp.asarray(qp_a.q_max, jnp.float32),
-                )
-                modes.append("float_qact")
-            else:
-                layers[name] = dict(w=w, b=b)
-                modes.append("float")
+            layers[name] = dict(store, b=b)
+            modes.append("float")
 
     tables: Dict[str, jnp.ndarray] = {}
     for l in range(cfg.hash.n_levels):
         t = params["hash"][f"level_{l}"]
         bits = float(hb[l])
-        if bits < 16.0:
+        if bits <= 8.0:
+            # Integer codes + scale, bit-packed: hash bits shrink the pack.
+            tables[f"level_{l}"] = _pack_weight(t, bits, pe)
+        elif bits < 16.0:
             qp = weight_qparams(jnp.min(t), jnp.max(t), bits, paper_exact=pe)
-            t = fake_quant_weight(t, qp)
-        tables[f"level_{l}"] = t
+            tables[f"level_{l}"] = fake_quant_weight(t, qp)
+        else:
+            tables[f"level_{l}"] = t
     return FusedPack(layers=layers, hash_tables=tables, modes=tuple(modes))
+
+
+def fused_pack_stored_bytes(pack: FusedPack) -> int:
+    """Exact bytes of the pack's quantized model payload — the weight
+    representation per linear layer (packed words or f32 carrier) plus
+    every hash table. The SAME quantities `policy_model_bytes` predicts
+    from the bit vectors: the frontier objective and the shipped artifact
+    measure one number."""
+    total = 0
+    for lyr in pack.layers.values():
+        if "wq" in lyr:
+            total += lyr["wq"].nbytes_packed
+        else:
+            total += int(np.size(lyr["w"])) * 4
+    for tab in pack.hash_tables.values():
+        if isinstance(tab, PackedTensor):
+            total += tab.nbytes_packed
+        else:
+            total += int(np.size(tab)) * 4
+    return total
+
+
+def _fused_weight_f32(lyr) -> jnp.ndarray:
+    """The layer's float-carrier weight: dequantized packed codes when the
+    storage is sub-byte, the stored f32 carrier otherwise."""
+    if "wq" in lyr:
+        return lyr["wq"].dequantize()
+    return lyr["w"]
 
 
 def _fused_linear(pack: FusedPack, i: int, name: str, x, use_pallas):
@@ -176,21 +244,21 @@ def _fused_linear(pack: FusedPack, i: int, name: str, x, use_pallas):
         codes = jnp.clip(jnp.round(x / lyr["sx"] + lyr["zx_f"]), 0.0, lyr["qmax"])
         if use_pallas is True or (use_pallas == "auto" and on_tpu()):
             ci8 = (codes - lyr["off"]).astype(jnp.int8)
-            y = ops_quant_matmul(
-                ci8, lyr["w_codes"], lyr["sx"], lyr["sw"], lyr["zx"],
+            y = ops_quant_matmul_packed(
+                ci8, lyr["wq"], lyr["sx"], lyr["wq"].scale, lyr["zx"],
                 use_pallas=use_pallas,
             )
         else:
-            # Float carrier of the SAME integer grid (see module docstring):
-            # (codes - Z) * s is exactly the dequantized activation, w_deq
-            # the dequantized weight codes.
-            y = ((codes - lyr["zx_f"]) * lyr["sx"]) @ lyr["w_deq"]
+            # Float carrier of the SAME stored codes (module docstring):
+            # (codes - Z) * s is exactly the dequantized activation, the
+            # unpacked code grid exactly the kernel's weights.
+            y = ((codes - lyr["zx_f"]) * lyr["sx"]) @ _fused_weight_f32(lyr)
         return y + lyr["b"]
     if mode == "float_qact":
         codes = jnp.clip(jnp.round(x / lyr["sx"] + lyr["zx_f"]), 0.0, lyr["qmax"])
         xq = (codes - lyr["zx_f"]) * lyr["sx"]
-        return xq @ lyr["w"] + lyr["b"]
-    return x @ lyr["w"] + lyr["b"]
+        return xq @ _fused_weight_f32(lyr) + lyr["b"]
+    return x @ _fused_weight_f32(lyr) + lyr["b"]
 
 
 def fused_ngp_apply(
@@ -212,8 +280,14 @@ def fused_ngp_apply(
             idx, w = level_corner_data(points, l, cfg.hash)  # (P, 8)
         else:
             idx, w = corner_data[0][l], corner_data[1][l]
+        table = pack.hash_tables[f"level_{l}"]
+        if isinstance(table, PackedTensor):
+            # Stored form is integer codes in packed words; the gather
+            # runs over the dequantized grid (codes * scale), expanded
+            # inside the jitted call — DRAM holds the packed bytes.
+            table = table.dequantize()
         vals = ops_hash_gather(
-            idx.reshape(-1), pack.hash_tables[f"level_{l}"], use_pallas=use_pallas
+            idx.reshape(-1), table, use_pallas=use_pallas
         ).reshape(idx.shape + (cfg.hash.n_features,))
         feats.append(jnp.sum(vals * w[..., None], axis=1))
     enc = jnp.concatenate(feats, axis=-1)

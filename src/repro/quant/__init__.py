@@ -17,6 +17,14 @@ from repro.quant.linear_quant import (
     fake_quant_weight,
     fake_quant_activation,
 )
+from repro.quant.packing import (
+    PackedTensor,
+    pack_codes,
+    pack_words,
+    unpack_words,
+    tensor_store_nbytes,
+    policy_model_bytes,
+)
 from repro.quant.calibration import calibrate_minmax, calibrate_percentile, Calibrator
 from repro.quant.policy import QuantUnit, QuantPolicy, UnitKind, fqr
 from repro.quant.qat import ste_round, fake_quant_params_tree
@@ -31,6 +39,12 @@ __all__ = [
     "dequantize_activation",
     "fake_quant_weight",
     "fake_quant_activation",
+    "PackedTensor",
+    "pack_codes",
+    "pack_words",
+    "unpack_words",
+    "tensor_store_nbytes",
+    "policy_model_bytes",
     "calibrate_minmax",
     "calibrate_percentile",
     "Calibrator",

@@ -1,0 +1,232 @@
+"""Sub-byte bit-packing: the storage codec that makes `model_bytes` real.
+
+HERO's third objective — model size — is only honest if a b-bit policy
+ships b-bit payloads. This module is the single source of truth for that
+representation, end to end:
+
+  - `PackedTensor`: integer codes bit-packed into int32 words plus the
+    (bits, scale, offset) metadata needed to decode them. Pack/unpack are
+    pure jnp bit ops (shift/mask/sum), so unpacking can run inside jit —
+    including inside a Pallas kernel tile — and the round trip is exact
+    for any bits in 1..8 over any shape (word-unaligned sizes included).
+  - `tensor_store_nbytes` / `policy_model_bytes`: the shared size
+    function. The hardware simulators (`hwsim/neurex.py`,
+    `hwsim/batched.py`, the roofline target), the Pareto frontier fed by
+    them, and the on-disk `QuantArtifact` all compute model size through
+    these, so the number the RL agent optimizes equals the bytes the
+    artifact stores — exactly, not analytically.
+
+Word layout (bit-plane packing)
+-------------------------------
+A tensor is viewed as (rows, cols) with rows = shape[0] and
+cols = prod(shape[1:]). Along the row axis, rows are padded to groups of
+32; each group of 32 codes in a column is stored as `bits` consecutive
+int32 words — word p of a group holds bit p of all 32 codes (code j at
+bit position j). The packed array is therefore
+
+    words[g * bits + p, c]  =  sum_j  ((u[32 g + j, c] >> p) & 1) << j
+
+with u the unsigned codes. This layout costs exactly `bits` bits per
+code (plus row padding to the next multiple of 32) for EVERY bits in
+1..8 — no per-word waste for bit widths that do not divide 32 — and a
+128-row matmul tile always covers whole groups (128 * bits is a multiple
+of 32), so Pallas K-tiles never split a code across tile boundaries.
+
+Codes and the one-LSB clamp edge
+--------------------------------
+Codes are stored offset-binary: the packed word holds u = q - offset
+with u clipped to [0, 2^bits - 1]; `codes()` returns q = u + offset.
+`pack_codes(offset=None)` picks offset = max(min(q), max(q) - 2^b + 1),
+the window that keeps the TOP of the range exact and clamps only at the
+bottom. This matters because the paper-exact symmetric weight grid
+(Eq. 5, q_min = -2^(b-1) - 1) has 2^b + 1 levels — one more than b bits
+can hold. A tensor that actually uses the full span loses its single
+lowest level by one LSB; every other tensor round-trips exactly. See
+`nerf/fast_render.py` for where this edge meets the render path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32  # codes per bit-plane word
+
+
+def _rows_cols(shape: Sequence[int]) -> Tuple[int, int]:
+    shape = tuple(int(s) for s in shape)
+    rows = shape[0] if shape else 1
+    cols = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 else 1
+    return rows, cols
+
+
+def packed_groups(rows: int) -> int:
+    """Number of 32-code groups (bit-plane word rows per plane)."""
+    return -(-int(rows) // WORD_BITS)
+
+
+# ---------------------------------------------------------------------------
+# PackedTensor
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackedTensor:
+    """Sub-byte integer codes bit-packed into int32 words.
+
+    words  (groups*bits, cols) int32 — bit-plane layout (module docstring)
+    scale  ()  f32   — dequantization scale (`dequantize` = codes * scale)
+    offset ()  int32 — code offset: logical code q = unpacked u + offset
+                       (for an asymmetric grid with zero point Z, store
+                       offset = -Z and `dequantize` yields (q - Z) * s)
+    bits   static int        — code width, 1..8
+    shape  static tuple      — logical tensor shape restored by unpack
+    """
+
+    words: jnp.ndarray
+    scale: jnp.ndarray
+    offset: jnp.ndarray
+    bits: int
+    shape: Tuple[int, ...]
+
+    @property
+    def rows(self) -> int:
+        return _rows_cols(self.shape)[0]
+
+    @property
+    def cols(self) -> int:
+        return _rows_cols(self.shape)[1]
+
+    @property
+    def nbytes_packed(self) -> int:
+        """Exact stored payload bytes (the words array)."""
+        return packed_groups(self.rows) * self.bits * self.cols * 4
+
+    def codes(self) -> jnp.ndarray:
+        """Signed integer codes q (int32, logical shape). Pure jnp —
+        traceable inside jit."""
+        return unpack_words(self.words, self.bits, self.shape) + self.offset
+
+    def dequantize(self) -> jnp.ndarray:
+        """Float tensor q * scale (f32, logical shape)."""
+        return self.codes().astype(jnp.float32) * self.scale
+
+
+jax.tree_util.register_dataclass(
+    PackedTensor,
+    data_fields=["words", "scale", "offset"],
+    meta_fields=["bits", "shape"],
+)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack (pure bit ops)
+# ---------------------------------------------------------------------------
+def pack_words(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned codes u (any shape, values in [0, 2^bits - 1]) into
+    bit-plane int32 words of shape (groups*bits, cols). Pure jnp."""
+    assert 1 <= bits <= 8, bits
+    rows, cols = _rows_cols(u.shape)
+    g = packed_groups(rows)
+    u = jnp.asarray(u, jnp.int32).reshape(rows, cols)
+    u = jnp.pad(u, ((0, g * WORD_BITS - rows), (0, 0)))
+    u = u.reshape(g, WORD_BITS, cols)
+    pos = jnp.arange(WORD_BITS, dtype=jnp.int32)[None, :, None]
+    planes = [
+        jnp.sum(((u >> p) & 1) << pos, axis=1, dtype=jnp.int32)  # (g, cols)
+        for p in range(bits)
+    ]
+    return jnp.stack(planes, axis=1).reshape(g * bits, cols)
+
+
+def unpack_words(
+    words: jnp.ndarray, bits: int, shape: Sequence[int]
+) -> jnp.ndarray:
+    """Invert `pack_words` -> unsigned codes u (int32, logical shape)."""
+    assert 1 <= bits <= 8, bits
+    rows, cols = _rows_cols(shape)
+    g = packed_groups(rows)
+    w = jnp.asarray(words, jnp.int32).reshape(g, bits, cols)
+    pos = jnp.arange(WORD_BITS, dtype=jnp.int32)[None, :, None]
+    u = jnp.zeros((g, WORD_BITS, cols), jnp.int32)
+    for p in range(bits):
+        u = u | (((w[:, p : p + 1, :] >> pos) & 1) << p)
+    return u.reshape(g * WORD_BITS, cols)[:rows].reshape(tuple(shape))
+
+
+def pack_codes(
+    codes,
+    bits: int,
+    scale=1.0,
+    offset=None,
+) -> PackedTensor:
+    """Pack integer codes (any int-valued array) at `bits` per code.
+
+    `offset=None` (host-side only: needs concrete values) picks the
+    representable window max(min(q), max(q) - 2^bits + 1) — top-exact,
+    clamping at most one LSB at the bottom and only when the codes span
+    more than 2^bits levels (the paper-exact-grid edge; module
+    docstring). Pass an explicit offset for a fixed grid (e.g. the
+    asymmetric activation grid's -zero_point)."""
+    q = np.asarray(codes)
+    q = np.round(q).astype(np.int64)  # fake-quant paths carry float ints
+    if offset is None:
+        if q.size == 0:
+            offset = 0
+        else:
+            offset = int(max(q.min(), q.max() - (2**bits - 1)))
+    u = np.clip(q - int(offset), 0, 2**bits - 1).astype(np.int32)
+    return PackedTensor(
+        words=pack_words(jnp.asarray(u), bits),
+        scale=jnp.asarray(scale, jnp.float32),
+        offset=jnp.asarray(int(offset), jnp.int32),
+        bits=int(bits),
+        shape=tuple(int(s) for s in np.shape(codes)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The shared size function
+# ---------------------------------------------------------------------------
+def tensor_store_nbytes(rows: int, cols: int, bits, xp=np):
+    """Bytes the packed stack stores for one (rows, cols) tensor at
+    `bits`: bit-plane int32 words for bits <= 8, a float32 carrier above
+    (the 9..15 fake-quant band and the >= 16 full-precision sentinel).
+
+    `bits` may be a traced jnp scalar (pass xp=jnp) — this is the SAME
+    formula the batched/vmapped simulators trace, the scalar simulators
+    evaluate, and `PackedTensor.nbytes_packed` measures, so frontier
+    model_bytes and artifact bytes agree exactly."""
+    groups = packed_groups(rows)
+    b = xp.asarray(bits, jnp.float32) if xp is jnp else np.asarray(
+        bits, np.float64
+    )
+    sub = 4.0 * groups * xp.round(b) * cols
+    full = 4.0 * rows * cols
+    return xp.where(b <= 8.0, sub, full)
+
+
+def policy_model_bytes(
+    level_entries: Sequence[int],
+    n_features: int,
+    mlp_dims: Sequence[Tuple[int, int]],
+    hash_bits,
+    w_bits,
+    xp=np,
+):
+    """Total stored model bytes of one policy: every hash level's table
+    (rows=entries, cols=n_features) plus every linear layer's weight
+    (rows=d_in, cols=d_out), through `tensor_store_nbytes`. Shapes are
+    static; the bit arrays may be traced (xp=jnp) — usable under
+    jit/vmap/shard_map."""
+    total = 0.0
+    for l, entries in enumerate(level_entries):
+        total = total + tensor_store_nbytes(
+            int(entries), int(n_features), hash_bits[l], xp
+        )
+    for i, (d_in, d_out) in enumerate(mlp_dims):
+        total = total + tensor_store_nbytes(
+            int(d_in), int(d_out), w_bits[i], xp
+        )
+    return total

@@ -255,12 +255,25 @@ def test_artifact_roundtrip_identical_psnr(tiny_env, tiny_artifact, tmp_path):
     assert loaded.scene == tiny_artifact.scene
     assert loaded.cfg == tiny_artifact.cfg
     assert loaded.hardware == tiny_artifact.hardware
-    # Packed integer codes survive bit-for-bit.
+    # Packed integer code words survive bit-for-bit (weights AND tables).
+    def assert_same(v, got):
+        from repro.quant.packing import PackedTensor
+
+        if isinstance(v, PackedTensor):
+            assert isinstance(got, PackedTensor)
+            assert (v.bits, v.shape) == (got.bits, got.shape)
+            for f in ("words", "scale", "offset"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(v, f)), np.asarray(getattr(got, f))
+                )
+        else:
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(got))
+
     for name, lyr in tiny_artifact.pack.layers.items():
         for k, v in lyr.items():
-            np.testing.assert_array_equal(
-                np.asarray(v), np.asarray(loaded.pack.layers[name][k])
-            )
+            assert_same(v, loaded.pack.layers[name][k])
+    for name, t in tiny_artifact.pack.hash_tables.items():
+        assert_same(t, loaded.pack.hash_tables[name])
     assert loaded.pack.modes == tiny_artifact.pack.modes
 
     psnr_loaded = loaded.engine().evaluate_psnr(ds)
@@ -369,6 +382,159 @@ def test_service_budget_grows_instead_of_dropping(tiny_artifact):
         warmup=False,
     ).render(ro, rd)
     np.testing.assert_allclose(out, exact, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model_bytes exactness: frontier objective == stored payload == disk bytes
+# ---------------------------------------------------------------------------
+def test_model_bytes_exact_from_search_to_disk(tiny_env, tmp_path):
+    """Acceptance pin: for a mixed 4-bit-MLP / 6-bit-hash policy, the
+    simulator's model_bytes (the frontier objective), the compiled
+    artifact's metric, the in-memory pack payload, and the bytes actually
+    sitting in arrays.npz are ONE number."""
+    from repro.hero.artifact import _SEP
+    from repro.quant.policy import QuantPolicy
+
+    bits = [6 if u.name.startswith("hash/") else 4 for u in tiny_env.units]
+    art = hero.compile(tiny_env, bits)
+
+    policy = QuantPolicy.uniform(tiny_env.units, 8).with_bits(bits)
+    lat = tiny_env.simulate_policy(policy)
+    assert art.metrics["model_bytes"] == lat.model_bytes
+    assert art.metrics["model_bytes"] == art.stored_model_bytes()
+
+    # The batched evaluator (what the closed loop's frontier consumes)
+    # lands on the same number.
+    from repro.core.batched_env import BatchedQuantEnv
+
+    benv = BatchedQuantEnv(tiny_env)
+    sim = benv.simulate_batch(np.asarray([bits], np.int32))
+    assert float(sim["model_bytes"][0]) == art.metrics["model_bytes"]
+
+    # And the number is what the directory physically holds.
+    path = art.save(tmp_path / "art")
+    disk = 0
+    with np.load(path / "arrays.npz") as z:
+        for k in z.files:
+            parts = k.split(_SEP)
+            if parts[-2:] == ["pt", "words"]:
+                disk += z[k].nbytes  # packed weight/table words
+            elif parts[0] == "pack" and parts[-1] == "w":
+                disk += z[k].nbytes  # f32 weight carrier (>8-bit units)
+            elif parts[0] == "packtab" and "pt" not in parts:
+                disk += z[k].nbytes  # f32 table carrier (>8-bit levels)
+    assert disk == art.stored_model_bytes()
+
+    # Sub-byte is real: the payload beats one-byte-per-code int8 storage
+    # (4/6-bit codes pack to 0.5x/0.75x of an int8 store).
+    from repro.quant.packing import PackedTensor
+
+    int8_store = sum(
+        int(np.prod(v.shape))
+        for lyr in art.pack.layers.values()
+        for v in lyr.values()
+        if isinstance(v, PackedTensor)
+    ) + sum(
+        int(np.prod(t.shape))
+        for t in art.pack.hash_tables.values()
+        if isinstance(t, PackedTensor)
+    )
+    assert disk < 0.8 * int8_store
+
+
+# ---------------------------------------------------------------------------
+# Schema v1 -> v2 auto-upgrade
+# ---------------------------------------------------------------------------
+def _write_v1_dir(artifact, path):
+    """Materialize the legacy schema-1 layout (int8 weight codes + f32
+    w_deq carrier + float-carrier hash tables) from a v2 artifact, with a
+    valid v1 manifest — the format PR 4 shipped."""
+    from repro.hero.artifact import _SEP, _sha
+    from repro.quant.packing import PackedTensor
+
+    arrays = {"act_ranges": np.asarray(artifact.act_ranges)}
+    for top, sub in artifact.params.items():
+        for k, v in sub.items():
+            arrays[f"params{_SEP}{top}{_SEP}{k}"] = np.asarray(v)
+    for name, lyr in artifact.pack.layers.items():
+        for k, v in lyr.items():
+            if isinstance(v, PackedTensor):
+                arrays[f"pack{_SEP}{name}{_SEP}w_codes"] = np.clip(
+                    np.asarray(v.codes()), -128, 127
+                ).astype(np.int8)
+                arrays[f"pack{_SEP}{name}{_SEP}w_deq"] = np.asarray(
+                    v.dequantize()
+                )
+                arrays[f"pack{_SEP}{name}{_SEP}sw"] = np.asarray(v.scale)
+            else:
+                arrays[f"pack{_SEP}{name}{_SEP}{k}"] = np.asarray(v)
+    for name, t in artifact.pack.hash_tables.items():
+        tt = t.dequantize() if isinstance(t, PackedTensor) else t
+        arrays[f"packtab{_SEP}{name}"] = np.asarray(tt)
+    arrays["occ"] = np.asarray(artifact.occ.occ)
+
+    manifest = {
+        "schema_version": 1,
+        "scene": artifact.scene,
+        "bits": [int(b) for b in artifact.bits],
+        "cfg": dataclasses.asdict(artifact.cfg),
+        "rcfg": dataclasses.asdict(artifact.rcfg),
+        "scene_cfg": artifact.scene_cfg,
+        "pack_modes": list(artifact.pack.modes),
+        "occ": {
+            "resolution": artifact.occ.resolution,
+            "threshold": artifact.occ.threshold,
+            "occupied_fraction": artifact.occ.occupied_fraction,
+        },
+        "hardware": artifact.hardware,
+        "metrics": artifact.metrics,
+        "arrays": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                "sha256": _sha(v)}
+            for k, v in arrays.items()
+        },
+    }
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    with open(path / "arrays.npz", "wb") as f:
+        np.savez(f, **arrays)
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return path
+
+
+def test_v1_artifact_auto_upgrades_and_serves_identically(
+    tiny_env, tiny_artifact, tmp_path
+):
+    """Loading a v1 directory re-packs through the deterministic
+    `build_fused_pack` path: identical PSNR to the v2 compile of the same
+    params, measured model_bytes, and re-saving writes schema v2."""
+    _write_v1_dir(tiny_artifact, tmp_path / "v1")
+    loaded = hero.QuantArtifact.load(tmp_path / "v1")
+    assert loaded.schema_version == 2
+    assert loaded.metrics["model_bytes"] == loaded.stored_model_bytes()
+
+    ds = tiny_env.dataset
+    psnr_v1 = loaded.engine().evaluate_psnr(ds)
+    psnr_v2 = tiny_artifact.engine().evaluate_psnr(ds)
+    assert psnr_v1 == psnr_v2  # 0.0000 dB, exactly
+
+    loaded.save(tmp_path / "resaved")
+    manifest = json.loads((tmp_path / "resaved" / "manifest.json").read_text())
+    assert manifest["schema_version"] == 2
+    again = hero.QuantArtifact.load(tmp_path / "resaved")
+    assert again.engine().evaluate_psnr(ds) == psnr_v2
+
+
+def test_v1_artifact_corrupted_sha_still_refuses(tiny_artifact, tmp_path):
+    """Integrity runs BEFORE the v1 upgrade path: a corrupted array fails
+    loudly, never silently re-packs."""
+    path = _write_v1_dir(tiny_artifact, tmp_path / "v1")
+    manifest = json.loads((path / "manifest.json").read_text())
+    some_key = next(k for k in manifest["arrays"] if k.startswith("params"))
+    manifest["arrays"][some_key]["sha256"] = "f" * 16
+    (path / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="integrity"):
+        hero.QuantArtifact.load(path)
 
 
 def test_facade_best_bits_and_compile_accepts_bundle(tiny_env):

@@ -1,0 +1,180 @@
+"""Sub-byte packing codec: round-trip identity, size-function agreement,
+and packed-vs-int8 `quant_matmul` equality (tentpole satellites).
+
+Property style via the hypothesis shim (real hypothesis when installed,
+endpoint + seeded samples otherwise), covering bits 2..8 over random
+shapes INCLUDING non-word-aligned row counts.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.kernels import ops, ref
+from repro.quant.packing import (
+    PackedTensor,
+    pack_codes,
+    pack_words,
+    policy_model_bytes,
+    tensor_store_nbytes,
+    unpack_words,
+)
+
+
+# ---------------------------------------------------------------------------
+# 1. pack/unpack round-trip identity
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 9),
+    seed=st.integers(0, 1000),
+)
+def test_roundtrip_identity_within_window(bits, rows, cols, seed):
+    """Codes spanning at most 2^bits levels survive pack -> unpack
+    EXACTLY, for any shape — word-unaligned row counts included."""
+    rng = np.random.RandomState(seed)
+    half = 2 ** (bits - 1)
+    shape = (rows,) if cols == 1 and rows % 2 else (rows, cols)
+    q = rng.randint(-half, half, size=shape)  # 2^bits levels
+    pt = pack_codes(q, bits, scale=0.25)
+    np.testing.assert_array_equal(np.asarray(pt.codes()), q)
+    np.testing.assert_allclose(np.asarray(pt.dequantize()), q * 0.25)
+    # Stored bytes match the shared size function and the words array.
+    n_cols = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    assert (
+        pt.nbytes_packed
+        == pt.words.size * 4
+        == int(tensor_store_nbytes(shape[0], n_cols, float(bits)))
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_full_span_clamps_one_lsb_bottom_only(bits, seed):
+    """The paper-exact grid's 2^bits + 1 levels exceed the payload by one:
+    packing clamps ONLY the lowest level, by exactly one LSB, keeping the
+    top of the range exact (the documented clamp edge)."""
+    rng = np.random.RandomState(seed)
+    half = 2 ** (bits - 1)
+    q = rng.randint(-half - 1, half, size=(64,))
+    q[0], q[1] = -half - 1, half - 1  # force the full span
+    pt = pack_codes(q, bits)
+    got = np.asarray(pt.codes())
+    np.testing.assert_array_equal(got, np.maximum(q, -half))
+    assert got.max() == half - 1  # top exact
+    assert int(np.abs(got - q).max()) == 1  # one LSB, bottom only
+
+
+def test_unaligned_rows_pad_without_leaking():
+    """Padding rows beyond the logical shape never reach unpack output."""
+    q = np.arange(33).reshape(33, 1) % 16
+    pt = pack_codes(q, 4)
+    assert pt.words.shape == (2 * 4, 1)  # 2 groups x 4 planes
+    np.testing.assert_array_equal(np.asarray(pt.codes()), q)
+
+
+def test_pack_words_unpack_words_inverse_all_bits():
+    rng = np.random.RandomState(7)
+    for bits in range(1, 9):
+        u = rng.randint(0, 2**bits, size=(100, 3)).astype(np.int32)
+        w = pack_words(jnp.asarray(u), bits)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_words(w, bits, u.shape)), u
+        )
+
+
+# ---------------------------------------------------------------------------
+# 2. packed-vs-int8 quant_matmul equality
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    m=st.integers(1, 70),
+    k=st.integers(1, 260),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 1000),
+)
+def test_packed_matmul_equals_int8_matmul(bits, m, k, n, seed):
+    """`quant_matmul_packed` (reference AND interpret-mode Pallas, i.e.
+    unpack-on-load inside the kernel) == `quant_matmul` on the unpacked
+    int8 codes, bit-exactly, for every width and unaligned shape."""
+    rng = np.random.RandomState(seed)
+    half = 2 ** (bits - 1)
+    w_q = rng.randint(-half, half, size=(k, n))
+    x = rng.randint(-128, 128, size=(m, k)).astype(np.int8)
+    wq = pack_codes(w_q, bits, scale=0.01)
+    sx, sw, zx = 0.02, 0.01, 3
+
+    want = ops.quant_matmul(
+        jnp.asarray(x), jnp.asarray(w_q.astype(np.int8)), sx, sw, zx,
+        use_pallas=False,
+    )
+    got_ref = ops.quant_matmul_packed(
+        jnp.asarray(x), wq, sx, sw, zx, use_pallas=False
+    )
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    got_pallas = ops.quant_matmul_packed(
+        jnp.asarray(x), wq, sx, sw, zx, use_pallas=True
+    )
+    np.testing.assert_array_equal(np.asarray(got_pallas), np.asarray(want))
+
+
+def test_packed_matmul_int8_clamp_matches_build_time_clip():
+    """At b = 8 the paper-exact -129 level clamps to the int8 MXU range in
+    BOTH paths: the packed kernel's in-kernel clip reproduces the legacy
+    build-time `clip(w_codes, -128, 127)` exactly."""
+    k, n = 40, 8
+    rng = np.random.RandomState(0)
+    w_q = rng.randint(-129, 128, size=(k, n))
+    w_q[0, 0] = -129
+    x = rng.randint(-128, 128, size=(16, k)).astype(np.int8)
+    wq = pack_codes(w_q, 8)
+    want = ref.quant_matmul_ref(
+        jnp.asarray(x), jnp.asarray(np.clip(w_q, -128, 127)), 0.5, 0.25, 2
+    )
+    got = ops.quant_matmul_packed(
+        jnp.asarray(x), wq, 0.5, 0.25, 2, use_pallas=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# 3. the shared size function
+# ---------------------------------------------------------------------------
+def test_size_function_np_jnp_agree():
+    import jax
+
+    levels = [64, 250, 2048]
+    dims = [(32, 32), (31, 3), (16, 16)]
+    hb = np.asarray([4.0, 6.0, 8.0])
+    wb = np.asarray([4.0, 32.0, 12.0])
+    want = float(policy_model_bytes(levels, 2, dims, hb, wb, xp=np))
+    got = float(jax.jit(
+        lambda h, w: policy_model_bytes(levels, 2, dims, h, w, xp=jnp)
+    )(jnp.asarray(hb), jnp.asarray(wb)))
+    assert got == want
+    # Sub-byte formula: exact b bits/code on 32-aligned rows, f32 above 8.
+    assert float(tensor_store_nbytes(64, 2, 4.0)) == 64 * 2 * 4 / 8
+    assert float(tensor_store_nbytes(64, 2, 6.0)) == 64 * 2 * 6 / 8
+    assert float(tensor_store_nbytes(64, 2, 12.0)) == 64 * 2 * 4
+    assert float(tensor_store_nbytes(64, 2, 32.0)) == 64 * 2 * 4
+
+
+def test_size_function_monotone_in_bits():
+    prev = 0.0
+    for b in range(1, 9):
+        cur = float(policy_model_bytes([512], 2, [(32, 16)], [b], [b]))
+        assert cur > prev
+        prev = cur
+
+
+@pytest.mark.parametrize("rows", [31, 32, 33, 250])
+def test_size_function_equals_packed_tensor(rows):
+    rng = np.random.RandomState(1)
+    for bits in (2, 5, 8):
+        q = rng.randint(0, 2**bits, size=(rows, 3))
+        pt = pack_codes(q, bits)
+        assert pt.nbytes_packed == int(tensor_store_nbytes(rows, 3, bits))
