@@ -64,6 +64,11 @@ register(
     "percentiles (BENCH_serve.json)",
 )
 register(
+    "serve_burst", "benchmarks.serve_burst", "main",
+    "multi-scene engine under bursty arrivals: p50/p95-under-load + LRU "
+    "cache behavior (BENCH_serve.json 'burst' key)",
+)
+register(
     "artifact_size", "benchmarks.artifact_size", "main",
     "packed-artifact bytes by policy + codec throughput + roundtrip PSNR "
     "parity gates (BENCH_artifact.json)",

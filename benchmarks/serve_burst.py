@@ -1,0 +1,241 @@
+"""Mixed-scene bursty-arrival serve benchmark: the engine under load.
+
+Compiles TWO quick scenes, round-trips both through disk, and drives the
+multi-scene `ServeEngine` with a bursty arrival pattern — a burst of
+interleaved chair/lego requests lands, the engine gets only a few device
+steps before the next burst arrives, so the queue deepens and latency is
+measured UNDER LOAD (the steady drain of `serve_throughput` never builds
+a backlog). Reports p50/p95-under-load, peak queue depth, LRU cache
+behavior, and per-scene PSNR parity vs the compile-time fused number.
+
+The report merges into ``BENCH_serve.json`` under the ``"burst"`` key so
+it composes with `serve_throughput`'s top-level report instead of
+clobbering it. With `--check-baseline`, fails (exit 1) when requests/sec
+drops more than `--max-drop` below the baseline's ``"burst"`` entry or
+any scene's PSNR delta leaves the 1e-3 dB band — the CI serve lane's
+second gate. The JSON is written BEFORE the gates fire.
+
+Usage (repo root on the path for `benchmarks.*`):
+  PYTHONPATH=src:. python benchmarks/serve_burst.py --quick
+  PYTHONPATH=src:. python benchmarks/serve_burst.py --quick \
+      --check-baseline benchmarks/BENCH_serve_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.closed_loop import SceneScale, build_scene_env
+from repro.hero.artifact import QuantArtifact, compile_artifact
+from repro.hero.engine import serve_engine
+from repro.hero.service import ServeConfig
+
+PSNR_BAND_DB = 1e-3  # serve vs in-process fused path, per scene
+
+
+def run_burst(
+    artifact_dirs: dict,
+    datasets: dict,
+    metrics_psnr: dict,
+    *,
+    bursts: int = 4,
+    burst_size: int = 8,
+    steps_between: int = 2,
+    slots: int = 4,
+    slot_rays: int = 512,
+    cache_mb: float = None,
+) -> dict:
+    """Bursty mixed-scene stream through the engine; timed phase measures
+    throughput + latency-under-load, an untimed full pass per scene then
+    measures PSNR parity."""
+    scenes = sorted(artifact_dirs)
+    ecfg = ServeConfig(slots=slots, slot_rays=slot_rays).engine_config(
+        cache_bytes=int(cache_mb * 2**20) if cache_mb is not None else None,
+    )
+    eng = serve_engine(
+        {}, ecfg,
+        loader=lambda s: QuantArtifact.load(artifact_dirs[s]),
+        warmup=False,
+    )
+    for s in scenes:  # compile outside the timed region
+        eng.render(datasets[s].test_rays_o[0], datasets[s].test_rays_d[0],
+                   scene=s)
+    eng.reset_stats()
+
+    rids = []
+    peak_queue = 0
+    t0 = time.perf_counter()
+    for b in range(bursts):
+        for i in range(burst_size):
+            k = b * burst_size + i
+            s = scenes[k % len(scenes)]
+            v = (k // len(scenes)) % datasets[s].test_rays_o.shape[0]
+            rids.append(eng.submit(
+                datasets[s].test_rays_o[v], datasets[s].test_rays_d[v],
+                scene=s,
+            ))
+        peak_queue = max(peak_queue, eng.pending)
+        for _ in range(steps_between):  # starved of steps: backlog builds
+            eng.step()
+    eng.drain()
+    wall = time.perf_counter() - t0
+    stats = eng.stats()
+    for rid in rids:  # free the burst buffers; stats live in the ring
+        eng.result(rid)
+
+    per_scene = {}
+    for s in scenes:  # untimed parity pass over each scene's full view set
+        ds = datasets[s]
+        se, px = 0.0, 0
+        for v in range(ds.test_rays_o.shape[0]):
+            colors = eng.render(ds.test_rays_o[v], ds.test_rays_d[v], scene=s)
+            gt = ds.test_rgb[v].reshape(-1, 3)
+            se += float(((colors - gt) ** 2).sum())
+            px += gt.size
+        psnr_serve = float(-10.0 * np.log10(max(se / px, 1e-12)))
+        per_scene[s] = {
+            "psnr_serve": round(psnr_serve, 4),
+            "psnr_inprocess": round(float(metrics_psnr[s]), 4),
+            "psnr_delta_db": round(abs(psnr_serve - float(metrics_psnr[s])), 4),
+        }
+
+    return {
+        "scenes": scenes,
+        "bursts": bursts,
+        "burst_size": burst_size,
+        "steps_between_bursts": steps_between,
+        "requests": len(rids),
+        "peak_queue_items": peak_queue,
+        "submit_to_drain_seconds": round(wall, 4),
+        "requests_per_sec": stats["requests_per_sec"],
+        "rays_per_sec": stats["rays_per_sec"],
+        "latency_ms_under_load": stats["latency_ms"],
+        "device_steps": stats["device_steps"],
+        "sample_budget": stats["sample_budget"],
+        "budget_retraces": stats["budget_retraces"],
+        "cache": stats["cache"],
+        "slots": slots,
+        "slot_rays": slot_rays,
+        "per_scene": per_scene,
+        "psnr_delta_db": round(
+            max(p["psnr_delta_db"] for p in per_scene.values()), 4
+        ),
+    }
+
+
+def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
+    base = json.loads(Path(baseline_path).read_text()).get("burst")
+    if base is None:
+        print("[bench-burst] baseline has no 'burst' entry; gate skipped "
+              "(refresh the committed baseline)")
+        return True
+    want = float(base["requests_per_sec"])
+    got = float(report["requests_per_sec"])
+    floor = want * (1.0 - max_drop)
+    ok = got >= floor
+    print(f"[bench-burst] regression gate: {got:.2f} req/s vs baseline "
+          f"{want:.2f} (floor {floor:.2f}, max drop {max_drop:.0%}) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--scenes", default="chair,lego")
+    ap.add_argument("--bits", type=int, default=8,
+                    help="uniform policy bit width to compile")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bursts", type=int, default=None)
+    ap.add_argument("--burst-size", type=int, default=None)
+    ap.add_argument("--steps-between", type=int, default=2,
+                    help="device steps granted between bursts")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slot-rays", type=int, default=512)
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="LRU artifact-cache budget in MiB (default "
+                         "unbounded: both scenes stay resident)")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="merged under the 'burst' key of this JSON")
+    ap.add_argument("--check-baseline", default=None,
+                    help="baseline BENCH_serve.json to gate against")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional requests/sec drop vs baseline")
+    args = ap.parse_args(argv)
+
+    scenes = [s for s in args.scenes.split(",") if s]
+    if len(scenes) < 2:
+        print("[bench-burst] needs >= 2 scenes (mixed-scene lane)",
+              file=sys.stderr)
+        return 2
+    scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    bursts = args.bursts or (3 if args.quick else 4)
+    burst_size = args.burst_size or (6 if args.quick else 8)
+
+    with tempfile.TemporaryDirectory(prefix="hero_burst_") as tmp:
+        dirs, datasets, psnrs = {}, {}, {}
+        for scene in scenes:
+            print(f"[bench-burst] compiling scene={scene} (uniform "
+                  f"{args.bits}-bit, "
+                  f"{'quick' if args.quick else 'standard'} scale) ...",
+                  flush=True)
+            env = build_scene_env(scene, scale, seed=args.seed)
+            art = compile_artifact(env, [args.bits] * env.n_units)
+            dirs[scene] = str(art.save(Path(tmp) / scene))
+            datasets[scene] = env.dataset
+            psnrs[scene] = art.metrics["psnr"]
+        report = run_burst(
+            dirs, datasets, psnrs,
+            bursts=bursts, burst_size=burst_size,
+            steps_between=args.steps_between,
+            slots=args.slots, slot_rays=args.slot_rays,
+            cache_mb=args.cache_mb,
+        )
+    report["scale"] = "quick" if args.quick else "standard"
+
+    out = Path(args.out)
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+            assert isinstance(merged, dict)
+        except (ValueError, AssertionError):
+            merged = {}
+    merged["burst"] = report
+    out.write_text(json.dumps(merged, indent=2))
+
+    lat = report["latency_ms_under_load"]
+    cache = report["cache"]
+    print(f"\n== serve burst ({report['bursts']} bursts x "
+          f"{report['burst_size']} mixed requests over "
+          f"{'+'.join(report['scenes'])}, {args.steps_between} steps "
+          f"between bursts) ==")
+    print(f"  requests/sec:       {report['requests_per_sec']}")
+    print(f"  latency under load: p50={lat['p50']} p95={lat['p95']} "
+          f"max={lat['max']} ms")
+    print(f"  peak queue:         {report['peak_queue_items']} items")
+    print(f"  cache:              loads={cache['loads']} "
+          f"evictions={cache['evictions']} hits={cache['hits']}")
+    print(f"  PSNR parity:        worst delta "
+          f"{report['psnr_delta_db']:.4f} dB")
+    print(f"  wrote {args.out} (key 'burst')")
+
+    if report["psnr_delta_db"] > PSNR_BAND_DB:
+        print(f"[bench-burst] PSNR PARITY FAIL: {report['psnr_delta_db']:.4f}"
+              f" dB exceeds the {PSNR_BAND_DB} dB band", file=sys.stderr)
+        return 1
+    if args.check_baseline and not check_baseline(
+        report, args.check_baseline, args.max_drop
+    ):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

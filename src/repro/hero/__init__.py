@@ -50,6 +50,9 @@ __all__ = [
     "compile_artifact",
     "RenderService",
     "ServeConfig",
+    "ServeEngine",
+    "EngineConfig",
+    "serve_engine",
 ]
 
 _LAZY = {
@@ -62,6 +65,9 @@ _LAZY = {
     "compile_artifact": ("repro.hero.artifact", "compile_artifact"),
     "RenderService": ("repro.hero.service", "RenderService"),
     "ServeConfig": ("repro.hero.service", "ServeConfig"),
+    "ServeEngine": ("repro.hero.engine", "ServeEngine"),
+    "EngineConfig": ("repro.hero.scheduler", "EngineConfig"),
+    "serve_engine": ("repro.hero.engine", "serve_engine"),
 }
 
 

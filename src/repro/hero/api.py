@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.hero.artifact import QuantArtifact, compile_artifact
+from repro.hero.engine import EngineConfig, ServeEngine, serve_engine
 from repro.hero.service import RenderService, ServeConfig
 from repro.hero.service import serve as _serve
 from repro.hero.targets import HardwareTarget
@@ -101,12 +102,29 @@ def compile_scene(
 
 
 def serve(
-    artifact: QuantArtifact,
-    cfg: ServeConfig = ServeConfig(),
+    artifacts,
+    cfg=None,
     warmup: bool = True,
-) -> RenderService:
-    """Stand up the request-batching fused render service for an artifact."""
-    return _serve(artifact, cfg, warmup=warmup)
+    *,
+    loader=None,
+    cache_bytes: Optional[int] = None,
+) -> Union[RenderService, ServeEngine]:
+    """Stand up the batched fused render serving layer.
+
+    One `QuantArtifact` -> the single-artifact `RenderService` facade
+    (PR-4 surface). A dict/list of artifacts -> the multi-scene
+    `ServeEngine` (continuous batching across scenes, LRU artifact cache
+    with `loader` on miss and `cache_bytes` eviction budget, streaming
+    `poll()`). `cfg` is a `ServeConfig` (shared knobs) or, for the
+    engine, an `EngineConfig` directly.
+    """
+    if isinstance(artifacts, QuantArtifact):
+        return _serve(artifacts, cfg or ServeConfig(), warmup=warmup)
+    if isinstance(cfg, EngineConfig):
+        ecfg = cfg
+    else:
+        ecfg = (cfg or ServeConfig()).engine_config(cache_bytes=cache_bytes)
+    return serve_engine(artifacts, ecfg, loader=loader, warmup=warmup)
 
 
 def best_bits(result, scene: Optional[str] = None) -> Tuple[str, List[int]]:

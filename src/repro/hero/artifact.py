@@ -111,6 +111,36 @@ class QuantArtifact:
         function predicts."""
         return fused_pack_stored_bytes(self.pack)
 
+    def resident_bytes(self) -> int:
+        """Total in-memory bytes of everything the artifact keeps resident
+        (float params + packed codes + occupancy + calibration) — the
+        price the serve engine's LRU cache charges for keeping the scene
+        loaded. Metadata reads only (`.nbytes` per array), no host copies:
+        cheap enough to call on every admission decision."""
+
+        def nb(v) -> int:
+            if isinstance(v, PackedTensor):
+                return int(v.words.nbytes + v.scale.nbytes + v.offset.nbytes)
+            return int(v.nbytes)
+
+        total = nb(self.act_ranges) + nb(self.occ.occ)
+        for sub in self.params.values():
+            total += sum(nb(v) for v in sub.values())
+        for lyr in self.pack.layers.values():
+            total += sum(nb(v) for v in lyr.values())
+        total += sum(nb(t) for t in self.pack.hash_tables.values())
+        return total
+
+    def cache_key(self) -> str:
+        """Cheap stable identity for serve-engine cache keys and logs:
+        (scene, hardware, policy bits). Not an integrity check — the
+        manifest sha256s own that."""
+        hw = (
+            self.hardware.get("name", "?")
+            if isinstance(self.hardware, dict) else str(self.hardware)
+        )
+        return f"{self.scene}/{hw}/b" + "".join(str(int(b)) for b in self.bits)
+
     # ------------------------------------------------------------------
     # Serialization
     # ------------------------------------------------------------------

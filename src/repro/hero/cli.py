@@ -209,6 +209,106 @@ def run_serve(
     }
 
 
+def run_serve_mixed(
+    artifact_dirs: Dict[str, str],
+    datasets: Dict[str, object],
+    metrics_psnr: Dict[str, float],
+    n_requests: int = 32,
+    slots: int = 4,
+    slot_rays: int = 512,
+    budget="auto",
+    cache_mb: Optional[float] = None,
+) -> Dict:
+    """Serve a round-robin mixed-scene request stream through the
+    multi-scene engine (artifacts load on miss from `artifact_dirs`
+    through the LRU cache) and report throughput, latency percentiles,
+    cache behavior, and per-scene PSNR parity vs compile time."""
+    import numpy as np
+
+    from repro.hero.artifact import QuantArtifact
+    from repro.hero.engine import serve_engine
+    from repro.hero.service import ServeConfig
+
+    scenes = sorted(artifact_dirs)
+    ecfg = ServeConfig(
+        slots=slots, slot_rays=slot_rays, budget=budget
+    ).engine_config(
+        cache_bytes=int(cache_mb * 2**20) if cache_mb is not None else None
+    )
+    eng = serve_engine(
+        {}, ecfg, loader=lambda s: QuantArtifact.load(artifact_dirs[s]),
+        warmup=False,
+    )
+    # Touch every scene once so compiles stay out of the timed region
+    # (under a tight cache budget later misses still reload, by design).
+    for s in scenes:
+        eng.render(
+            datasets[s].test_rays_o[0], datasets[s].test_rays_d[0], scene=s
+        )
+    eng.reset_stats()
+
+    rids = []  # (rid, scene, view)
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        s = scenes[i % len(scenes)]
+        v = (i // len(scenes)) % datasets[s].test_rays_o.shape[0]
+        rids.append(
+            (eng.submit(datasets[s].test_rays_o[v],
+                        datasets[s].test_rays_d[v], scene=s), s, v)
+        )
+    eng.drain()
+    wall = time.perf_counter() - t0
+    stats = eng.stats()
+
+    # Per-scene PSNR parity over one full pass of each scene's views
+    # (untimed fill-in for views the stream did not touch).
+    per_scene = {}
+    for s in scenes:
+        ds = datasets[s]
+        views = ds.test_rays_o.shape[0]
+        seen = {v: rid for rid, s2, v in rids if s2 == s}
+        se, px = 0.0, 0
+        for v in range(views):
+            colors = (
+                eng.result(seen[v]) if v in seen
+                else eng.render(ds.test_rays_o[v], ds.test_rays_d[v], scene=s)
+            )
+            gt = ds.test_rgb[v].reshape(-1, 3)
+            se += float(((colors - gt) ** 2).sum())
+            px += gt.size
+        psnr_serve = float(-10.0 * np.log10(max(se / px, 1e-12)))
+        per_scene[s] = {
+            "psnr_serve": round(psnr_serve, 4),
+            "psnr_inprocess": round(float(metrics_psnr[s]), 4),
+            "psnr_delta_db": round(
+                abs(psnr_serve - float(metrics_psnr[s])), 4
+            ),
+        }
+    for rid, _, _ in rids:  # duplicate-view rids were never retrieved
+        try:
+            eng.result(rid)
+        except KeyError:
+            pass  # already freed by the parity loop
+    return {
+        "scenes": scenes,
+        "requests": n_requests,
+        "submit_to_drain_seconds": round(wall, 4),
+        "requests_per_sec": stats["requests_per_sec"],
+        "rays_per_sec": stats["rays_per_sec"],
+        "latency_ms": stats["latency_ms"],
+        "device_steps": stats["device_steps"],
+        "sample_budget": stats["sample_budget"],
+        "budget_retraces": stats["budget_retraces"],
+        "cache": stats["cache"],
+        "slots": slots,
+        "slot_rays": slot_rays,
+        "per_scene": per_scene,
+        "psnr_delta_db": round(
+            max(p["psnr_delta_db"] for p in per_scene.values()), 4
+        ),
+    }
+
+
 def _parse_bits(s: Optional[str], n_units: int) -> Optional[Sequence[int]]:
     if not s:
         return None
@@ -240,6 +340,14 @@ def serve_main(argv=None) -> int:
                     help="load this saved artifact directory instead of "
                          "compiling from scratch")
     ap.add_argument("--scene", default="chair")
+    ap.add_argument("--scenes", default=None,
+                    help="comma-separated scenes -> the multi-scene engine "
+                         "(continuous batching across scenes, LRU artifact "
+                         "cache); overrides --scene")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="LRU artifact-cache budget in MiB for --scenes; "
+                         "evicted artifacts reload from disk on miss "
+                         "(default: unbounded)")
     ap.add_argument("--bits", default=None,
                     help="policy bits: one value (uniform) or a full "
                          "comma-separated vector; default uniform 8")
@@ -255,6 +363,43 @@ def serve_main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    scenes = [s for s in (args.scenes or "").split(",") if s]
+    if len(scenes) >= 2:
+        if args.artifact:
+            raise SystemExit("--scenes compiles from scratch; it cannot be "
+                             "combined with --artifact")
+        dirs, datasets, psnrs = {}, {}, {}
+        for scene in scenes:
+            print(f"[hero-serve] compiling {scene!r} at "
+                  f"{'quick' if args.quick else 'standard'} scale ...",
+                  flush=True)
+            env = build_scene_env(scene, scale, seed=args.seed)
+            art = compile_artifact(env, _parse_bits(args.bits, env.n_units))
+            dirs[scene] = art.save(
+                f"{args.save or 'experiments/artifacts'}/{scene}"
+            )
+            datasets[scene] = env.dataset
+            psnrs[scene] = art.metrics["psnr"]
+        report = run_serve_mixed(
+            {s: str(p) for s, p in dirs.items()}, datasets, psnrs,
+            n_requests=args.requests, slots=args.slots,
+            slot_rays=args.slot_rays, cache_mb=args.cache_mb,
+        )
+        Path(args.out).write_text(json.dumps(report, indent=2))
+        lat = report["latency_ms"]
+        cache = report["cache"]
+        print(f"\n== hero-serve: {report['requests']} mixed requests over "
+              f"{'+'.join(scenes)} ==")
+        print(f"  requests/sec:   {report['requests_per_sec']}")
+        print(f"  latency ms:     p50={lat['p50']} p95={lat['p95']}")
+        print(f"  cache:          loads={cache['loads']} "
+              f"evictions={cache['evictions']} hits={cache['hits']} "
+              f"resident={cache['resident']}")
+        print(f"  PSNR delta:     {report['psnr_delta_db']:.4f} dB (worst "
+              f"scene)")
+        print(f"  wrote {args.out}")
+        return 0
+
     if args.artifact:
         artifact = QuantArtifact.load(args.artifact)
         # Rebuild the EXACT eval set the compile metrics were measured on

@@ -1,0 +1,600 @@
+"""Continuous-batching multi-scene serve engine over `QuantArtifact`s.
+
+The shape of an LLM inference engine, specialized to NeRF rays:
+
+  submit -> per-scene FIFO queues -> [Scheduler] -> single-scene bucket
+         -> [ArtifactCache: LRU load-on-miss, byte-budgeted eviction]
+         -> device step (one jitted call, fixed padded shapes)
+         -> scatter into request buffers -> poll()/result() streaming
+
+Every `step()` admits up to `slots` queued work items of ONE scene (the
+scheduler's oldest-first bucket), renders them in one device call at the
+engine's fixed `(slots, slot_rays, 3)` padded shape, and scatters the
+colors back. Multiple artifacts are resident at once; because the padded
+bucket shape is a property of the ENGINE (not the artifact) and jax
+caches traces per static configuration, alternating scenes step after
+step re-uses each artifact's already-compiled trace — mixing scenes
+never retraces. Completed work items surface through `poll()` before the
+full request drains (streaming partial frames).
+
+Two seams make the whole scheduler drivable from tests with zero real
+renders, and they are the design constraint on this layer:
+
+  * `clock=` — any zero-arg float callable; defaults to
+    `time.perf_counter`. All timestamps (submit, done, latency stats)
+    come from it, so a fake counter makes timing assertions exact.
+  * `device_step=` — `(scene, artifact, ro, rd) -> (S, R, 3) colors`;
+    defaults to `FusedDeviceStep` (the real fused integer render with
+    grow-on-overflow sample budgets). A scripted fake turns `step()`
+    into a pure state transition.
+
+`loader=` (scene -> artifact) serves cache misses; `size_fn=` prices an
+artifact for the byte budget (defaults to `resident_bytes()` where
+available). Eviction never drops an artifact with in-flight work — with
+the synchronous step loop, in-flight == queued items, and such scenes
+are protected; if every resident scene is protected the cache runs over
+budget (counted as an overflow) rather than dropping work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.hero.scheduler import (
+    CompletedRecord,
+    EngineConfig,
+    RequestState,
+    Scheduler,
+    WorkItem,
+)
+
+
+def _default_size_fn(artifact) -> int:
+    fn = getattr(artifact, "resident_bytes", None)
+    return int(fn()) if callable(fn) else 0
+
+
+# ---------------------------------------------------------------------------
+# LRU artifact cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CacheEntry:
+    scene: str
+    artifact: object
+    nbytes: int
+
+
+class ArtifactCache:
+    """Byte-budgeted LRU over resident artifacts with load-on-miss."""
+
+    def __init__(
+        self,
+        cache_bytes: Optional[int],
+        loader: Optional[Callable[[str], object]],
+        size_fn: Callable[[object], int],
+        protected: Callable[[str], bool],
+        on_event: Callable[[Tuple], None],
+    ):
+        self.cache_bytes = cache_bytes
+        self._loader = loader
+        self._size_fn = size_fn
+        self._protected = protected
+        self._event = on_event
+        self._entries: "OrderedDict[str, CacheEntry]" = OrderedDict()
+        self.loads = 0
+        self.evictions = 0
+        self.hits = 0
+        self.overflows = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def scenes(self) -> List[str]:
+        return list(self._entries)
+
+    def __contains__(self, scene: str) -> bool:
+        return scene in self._entries
+
+    def add(self, scene: str, artifact) -> CacheEntry:
+        """Install a resident artifact (engine construction / explicit)."""
+        e = CacheEntry(scene, artifact, int(self._size_fn(artifact)))
+        self._entries[scene] = e
+        self._entries.move_to_end(scene)
+        return e
+
+    # ------------------------------------------------------------------
+    def ensure(self, scene: str) -> CacheEntry:
+        """Resident entry for `scene`, loading on miss (LRU-touched)."""
+        e = self._entries.get(scene)
+        if e is not None:
+            self._entries.move_to_end(scene)
+            self.hits += 1
+            return e
+        if self._loader is None:
+            raise KeyError(
+                f"scene {scene!r} is not resident and the engine has no "
+                "artifact loader"
+            )
+        artifact = self._loader(scene)
+        if artifact is None:
+            raise KeyError(f"artifact loader returned None for {scene!r}")
+        nbytes = int(self._size_fn(artifact))
+        self._evict_for(nbytes)
+        e = CacheEntry(scene, artifact, nbytes)
+        self._entries[scene] = e
+        self.loads += 1
+        self._event(("load", scene, nbytes))
+        return e
+
+    def _evict_for(self, incoming_bytes: int) -> None:
+        """Evict LRU-first until `incoming_bytes` fits; scenes with queued
+        work are protected, so the cache may run over budget instead."""
+        if self.cache_bytes is None:
+            return
+        for scene in list(self._entries):  # LRU -> MRU order
+            if self.resident_bytes + incoming_bytes <= self.cache_bytes:
+                return
+            if self._protected(scene):
+                continue
+            e = self._entries.pop(scene)
+            self.evictions += 1
+            self._event(("evict", scene, e.nbytes))
+        if self.resident_bytes + incoming_bytes > self.cache_bytes:
+            self.overflows += 1
+
+    def reset_stats(self) -> None:
+        self.loads = self.evictions = self.hits = self.overflows = 0
+
+
+# ---------------------------------------------------------------------------
+# Default device step: the real fused integer render
+# ---------------------------------------------------------------------------
+class FusedDeviceStep:
+    """`(scene, artifact, ro, rd) -> colors` through the fused render path.
+
+    Per-scene state (quant spec, eval rcfg, grow-on-overflow sample
+    budget) lives HERE, not in the cache entry: a scene's budget survives
+    eviction and reload, so re-admitting a hot scene does not re-pay its
+    growth retraces. Derived spec/rcfg rebuild only when the artifact
+    object actually changes (reload).
+    """
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self._align = 128
+        self._state: Dict[str, Dict] = {}
+
+    # ------------------------------------------------------------------
+    def _initial_budget(self, artifact, rcfg) -> Optional[int]:
+        cap = self.cfg.slot_rays * rcfg.n_samples
+        b = self.cfg.budget
+        if b is None:
+            return None
+        if b == "auto":
+            occf = artifact.occ.occupied_fraction
+            est = cap * min(1.0, occf * self.cfg.budget_headroom)
+            est = int(np.ceil(max(est, 1) / self._align) * self._align)
+            return int(np.clip(est, self._align, cap))
+        return int(np.clip(int(b), self._align, cap))
+
+    def _scene_state(self, scene: str, artifact) -> Dict:
+        st = self._state.get(scene)
+        if st is None or st["artifact_id"] != id(artifact):
+            rcfg = dataclasses.replace(artifact.rcfg, stratified=False)
+            st = {
+                "artifact_id": id(artifact),
+                "spec": artifact.spec(),
+                "rcfg": rcfg,
+                # Reload of the same scene keeps its grown budget.
+                "budget": (
+                    st["budget"] if st is not None
+                    else self._initial_budget(artifact, rcfg)
+                ),
+                "retraces": 0 if st is None else st["retraces"],
+            }
+            self._state[scene] = st
+        return st
+
+    # ------------------------------------------------------------------
+    def __call__(self, scene: str, artifact, ro: np.ndarray, rd: np.ndarray):
+        import jax.numpy as jnp
+
+        from repro.nerf.fast_render import _frame_colors_impl
+        from repro.nerf.occupancy import sample_active_mask
+
+        st = self._scene_state(scene, artifact)
+        if st["budget"] is not None:
+            # Exactness guard: grow the static budget (one retrace) before
+            # a step could overflow and silently drop samples.
+            active, _ = sample_active_mask(artifact.occ, ro, rd, st["rcfg"])
+            need = int(active.reshape(ro.shape[0], -1).sum(axis=1).max())
+            if need > st["budget"]:
+                grown = int(
+                    np.ceil(need * self.cfg.budget_headroom / self._align)
+                    * self._align
+                )
+                st["budget"] = min(
+                    grown, self.cfg.slot_rays * st["rcfg"].n_samples
+                )
+                st["retraces"] += 1
+        return np.asarray(_frame_colors_impl(
+            artifact.params, artifact.pack, st["spec"], artifact.occ,
+            jnp.asarray(ro), jnp.asarray(rd),
+            cfg=artifact.cfg, rcfg=st["rcfg"], mode="fused",
+            budget=st["budget"], use_pallas=self.cfg.use_pallas,
+            early_stop=self.cfg.early_stop,
+        ))
+
+    # ------------------------------------------------------------------
+    def budgets(self) -> Dict[str, Optional[int]]:
+        return {s: st["budget"] for s, st in self._state.items()}
+
+    @property
+    def retraces(self) -> int:
+        return sum(st["retraces"] for st in self._state.values())
+
+    def reset_stats(self) -> None:
+        for st in self._state.values():
+            st["retraces"] = 0
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+class ServeEngine:
+    """Multi-scene continuous-batching render engine (module docstring)."""
+
+    def __init__(
+        self,
+        artifacts=None,
+        cfg: EngineConfig = EngineConfig(),
+        *,
+        loader: Optional[Callable[[str], object]] = None,
+        clock: Optional[Callable[[], float]] = None,
+        device_step: Optional[Callable] = None,
+        size_fn: Optional[Callable[[object], int]] = None,
+    ):
+        self.cfg = cfg
+        self._clock = time.perf_counter if clock is None else clock
+        self._stepper = FusedDeviceStep(cfg) if device_step is None else None
+        self._device_step = device_step if device_step is not None else self._stepper
+        self._sched = Scheduler(cfg.slots)
+        self._events = (
+            deque(maxlen=cfg.trace_events) if cfg.trace_events > 0 else None
+        )
+        self._cache = ArtifactCache(
+            cfg.cache_bytes, loader,
+            size_fn if size_fn is not None else _default_size_fn,
+            protected=lambda scene: self._sched.pending(scene) > 0,
+            on_event=self._event,
+        )
+        for scene, artifact in self._as_scene_map(artifacts).items():
+            self._cache.add(scene, artifact)
+
+        self._requests: Dict[int, RequestState] = {}
+        self._ring: deque = deque(maxlen=max(1, cfg.completed_ring))
+        self._next_rid = 0
+        self._steps = 0
+        self._items_rendered = 0
+        self._rays_rendered = 0
+        self._requests_submitted = 0
+        self._requests_completed = 0
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _as_scene_map(artifacts) -> Dict[str, object]:
+        if artifacts is None:
+            return {}
+        if hasattr(artifacts, "items"):
+            return dict(artifacts)
+        if isinstance(artifacts, (list, tuple)):
+            return {a.scene: a for a in artifacts}
+        return {artifacts.scene: artifacts}
+
+    def _event(self, ev: Tuple) -> None:
+        if self._events is not None:
+            self._events.append(ev)
+
+    @property
+    def events(self) -> List[Tuple]:
+        """Recorded scheduler/cache events (cfg.trace_events > 0)."""
+        return list(self._events) if self._events is not None else []
+
+    # ------------------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Queued work items (all scenes)."""
+        return self._sched.pending()
+
+    @property
+    def scenes(self) -> List[str]:
+        """Scenes known to the engine (resident or with queued work)."""
+        out = list(self._cache.scenes())
+        for s in self._sched.scenes_with_work():
+            if s not in out:
+                out.append(s)
+        return out
+
+    @property
+    def resident_scenes(self) -> List[str]:
+        return self._cache.scenes()
+
+    @property
+    def budget(self) -> Optional[int]:
+        """Single-scene convenience: THE sample budget (facade compat)."""
+        if self._stepper is None:
+            return None
+        budgets = self._stepper.budgets()
+        if len(budgets) == 1:
+            return next(iter(budgets.values()))
+        return None
+
+    def budget_of(self, scene: str) -> Optional[int]:
+        if self._stepper is None:
+            return None
+        return self._stepper.budgets().get(scene)
+
+    @property
+    def retraces(self) -> int:
+        return self._stepper.retraces if self._stepper is not None else 0
+
+    # ------------------------------------------------------------------
+    def submit(self, rays_o, rays_d, scene: Optional[str] = None) -> int:
+        """Enqueue one render request ((N, 3) rays) for `scene`; returns a
+        request id. `scene=None` resolves only when exactly one scene is
+        resident (the single-artifact facade case)."""
+        ro = np.asarray(rays_o, np.float32).reshape(-1, 3)
+        rd = np.asarray(rays_d, np.float32).reshape(-1, 3)
+        assert ro.shape == rd.shape, (ro.shape, rd.shape)
+        if scene is None:
+            resident = self._cache.scenes()
+            if len(resident) != 1:
+                raise ValueError(
+                    "submit(scene=None) needs exactly one resident scene; "
+                    f"resident: {resident}"
+                )
+            scene = resident[0]
+        if scene not in self._cache and self._cache._loader is None:
+            raise ValueError(
+                f"scene {scene!r} is not resident and no loader is "
+                "configured — the request could never be served"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        now = self._clock()
+        R = self.cfg.slot_rays
+        n_rays = ro.shape[0]
+        n_items = max(1, -(-n_rays // R))
+        self._requests[rid] = RequestState(
+            rid=rid, scene=scene, n_rays=n_rays, n_items=n_items,
+            colors=np.zeros((n_rays, 3), np.float32),
+            done=np.zeros((n_rays,), bool), t_submit=now,
+        )
+        self._requests_submitted += 1
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+        for i in range(n_items):
+            s = i * R
+            e = min(s + R, n_rays) if n_rays else 0
+            self._sched.push(WorkItem(
+                rid=rid, scene=scene, seq=i, start=s, stop=e,
+                rays_o=ro[s:e], rays_d=rd[s:e],
+                order=self._sched.next_order(), t_enqueue=now,
+            ))
+        self._event(("submit", rid, scene, n_items))
+        return rid
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + render ONE single-scene bucket (up to `slots` items) in
+        one device call. Returns items completed (0 = idle)."""
+        scene = self._sched.oldest_scene()
+        if scene is None:
+            return 0
+        entry = self._cache.ensure(scene)  # load-on-miss + LRU eviction
+        scene2, items = self._sched.take_bucket()
+        assert scene2 == scene and items, (scene2, scene)
+
+        S, R = self.cfg.slots, self.cfg.slot_rays
+        # Padding rays (empty slots / short items) originate far outside
+        # the scene box with zero direction: every sample is inactive, so
+        # padding consumes neither cull budget nor field compute.
+        ro = np.full((S, R, 3), 10.0, np.float32)
+        rd = np.zeros((S, R, 3), np.float32)
+        for slot, it in enumerate(items):
+            n = it.stop - it.start
+            ro[slot, :n] = it.rays_o
+            rd[slot, :n] = it.rays_d
+
+        colors = np.asarray(self._device_step(scene, entry.artifact, ro, rd))
+        assert colors.shape == (S, R, 3), colors.shape
+        self._steps += 1
+        self._event(
+            ("bucket", scene, tuple((it.rid, it.seq) for it in items))
+        )
+
+        now = self._clock()
+        for slot, it in enumerate(items):
+            req = self._requests[it.rid]
+            n = it.stop - it.start
+            req.colors[it.start:it.stop] = colors[slot, :n]
+            req.done[it.start:it.stop] = True
+            req.fresh_spans.append((it.start, it.stop))
+            req.items_done += 1
+            self._items_rendered += 1
+            self._rays_rendered += n
+            if req.items_done == req.n_items:
+                req.t_done = now
+                self._t_last_done = now
+                self._requests_completed += 1
+                self._ring.append(CompletedRecord(
+                    rid=req.rid, scene=req.scene, n_rays=req.n_rays,
+                    t_submit=req.t_submit, t_done=now,
+                ))
+                self._event(("complete", it.rid))
+        return len(items)
+
+    def drain(self) -> None:
+        """Process every queue until the engine is idle."""
+        while self.step():
+            pass
+
+    # ------------------------------------------------------------------
+    # Results: streaming partials + terminal retrieval
+    # ------------------------------------------------------------------
+    def poll(self, rid: int) -> List[Tuple[int, int, np.ndarray]]:
+        """Completed-but-not-yet-polled spans of a live request, as
+        [(start, stop, colors-copy)] — the streaming seam: work items
+        surface here as soon as their device step lands, before the full
+        request drains. Spans already polled are not repeated."""
+        req = self._live(rid)
+        spans, req.fresh_spans = req.fresh_spans, []
+        return [(s, e, req.colors[s:e].copy()) for (s, e) in spans]
+
+    def partial(self, rid: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(colors, done_mask) snapshot of a live request: colors of rays
+        with done_mask False are meaningless zeros."""
+        req = self._live(rid)
+        return req.colors.copy(), req.done.copy()
+
+    def result(self, rid: int) -> np.ndarray:
+        """(N, 3) colors of a completed request. RETRIEVAL FREES the
+        request (the `_requests`-leak fix): a second call raises KeyError;
+        stats survive in the bounded completed ring."""
+        req = self._live(rid)
+        if req.t_done is None:
+            raise ValueError(f"request {rid} is not complete "
+                             f"({req.items_done}/{req.n_items} items)")
+        del self._requests[rid]
+        return req.colors
+
+    def _live(self, rid: int) -> RequestState:
+        req = self._requests.get(rid)
+        if req is None:
+            raise KeyError(
+                f"request {rid} unknown (never submitted, or already "
+                "retrieved — results are freed on retrieval)"
+            )
+        return req
+
+    def render(self, rays_o, rays_d, scene: Optional[str] = None) -> np.ndarray:
+        """Convenience: submit one request and drain the engine."""
+        rid = self.submit(rays_o, rays_d, scene=scene)
+        self.drain()
+        return self.result(rid)
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Compile each resident scene's render step outside any timed
+        region, then reset stats (grown budgets persist)."""
+        R = self.cfg.slot_rays
+        ro = np.zeros((R, 3), np.float32)
+        rd = np.tile(np.asarray([[0.0, 0.0, 1.0]], np.float32), (R, 1))
+        for scene in list(self._cache.scenes()):
+            rid = self.submit(ro, rd, scene=scene)
+            self.drain()
+            self.result(rid)
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        """Zero counters/timers/ring; live requests and budgets persist.
+        Conservation (`submitted == completed + pending`) is preserved by
+        re-basing the submitted counters on what is still in flight."""
+        live_incomplete = [
+            r for r in self._requests.values() if r.t_done is None
+        ]
+        self._requests_submitted = len(live_incomplete)
+        self._requests_completed = 0
+        self._sched.items_submitted = self._sched.pending()
+        self._sched.rays_submitted = self._sched.pending_rays()
+        self._items_rendered = 0
+        self._rays_rendered = 0
+        self._steps = 0
+        self._ring.clear()
+        self._t_first_submit = None
+        self._t_last_done = None
+        self._cache.reset_stats()
+        if self._stepper is not None:
+            self._stepper.reset_stats()
+        if self._events is not None:
+            self._events.clear()
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict:
+        """Counters, throughput, and ring-based latency percentiles."""
+        ring = list(self._ring)
+        lat_ms = np.asarray(
+            [(r.t_done - r.t_submit) * 1e3 for r in ring], np.float64
+        )
+        wall = (
+            (self._t_last_done - self._t_first_submit)
+            if self._t_last_done is not None
+            and self._t_first_submit is not None
+            else 0.0
+        )
+        done = self._requests_completed
+        pending_items = self._sched.pending()
+        budgets = self._stepper.budgets() if self._stepper is not None else {}
+        return {
+            "requests_submitted": self._requests_submitted,
+            "requests_completed": done,
+            "requests_pending": self._requests_submitted - done,
+            "items_submitted": self._sched.items_submitted,
+            "items_rendered": self._items_rendered,
+            "items_pending": pending_items,
+            "rays_submitted": self._sched.rays_submitted,
+            "rays_rendered": self._rays_rendered,
+            "rays_pending": self._sched.pending_rays(),
+            "device_steps": self._steps,
+            "wall_seconds": round(wall, 6),
+            "requests_per_sec": round(done / wall, 4) if wall > 0 else None,
+            "rays_per_sec": (
+                round(self._rays_rendered / wall, 1) if wall > 0 else None
+            ),
+            "latency_ms": {
+                "mean": round(float(lat_ms.mean()), 3) if ring else None,
+                "p50": round(float(np.percentile(lat_ms, 50)), 3) if ring else None,
+                "p95": round(float(np.percentile(lat_ms, 95)), 3) if ring else None,
+                "max": round(float(lat_ms.max()), 3) if ring else None,
+            },
+            "max_queue_age": self._sched.max_queue_age(),
+            "scenes": sorted(self.scenes),
+            "sample_budget": {s: budgets[s] for s in sorted(budgets)} or None,
+            "budget_retraces": self.retraces,
+            "cache": {
+                "resident": self._cache.scenes(),
+                "resident_bytes": self._cache.resident_bytes,
+                "capacity_bytes": self._cache.cache_bytes,
+                "loads": self._cache.loads,
+                "evictions": self._cache.evictions,
+                "hits": self._cache.hits,
+                "overflows": self._cache.overflows,
+            },
+            "slots": self.cfg.slots,
+            "slot_rays": self.cfg.slot_rays,
+        }
+
+
+def serve_engine(
+    artifacts,
+    cfg: EngineConfig = EngineConfig(),
+    *,
+    loader=None,
+    warmup: bool = True,
+    **kw,
+) -> ServeEngine:
+    """Stand up a multi-scene serve engine (the `hero.serve` entry point
+    for more than one artifact). `warmup=True` compiles each resident
+    scene's device step so first requests are not charged the trace."""
+    eng = ServeEngine(artifacts, cfg, loader=loader, **kw)
+    if warmup:
+        eng.warmup()
+    return eng

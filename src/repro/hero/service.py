@@ -1,19 +1,18 @@
-"""Request-batching NeRF render service over a `QuantArtifact`.
+"""`RenderService`: single-artifact compatibility facade over the engine.
 
-Serving shape (mirrors `repro.launch.serve`'s slot-recycled decode loop):
-requests arrive as ray batches, get split into slot-sized work items, and
-every `step()` renders ALL busy slots in ONE device-resident jitted call
-(`lax.map` over the slot axis through the fused integer render path —
-the same `_frame_colors_impl` the engine's full-frame path uses). A
-finished item frees its slot, which is refilled from the queue at the
-next step boundary — continuous batching across requests.
+The serving machinery lives in `repro.hero.engine` (`ServeEngine`: async
+request queues, continuous batching across requests AND scenes, LRU
+artifact cache, streaming partial frames). This module keeps the PR-4
+single-artifact surface — `submit`/`step`/`drain`/`result`/`render`/
+`warmup`/`stats`, plus the `budget`/`retraces`/`pending` properties —
+as a thin delegation layer, so existing callers and the serve benchmark
+drive the same scheduler the multi-scene engine uses.
 
-Culling at serve time is the dynamic-compaction path (ad-hoc rays have
-no precomputed `CullPlan`): a static per-slot sample budget bounds the
-compacted buffer. The service counts the active samples of each step on
-the host (the same `sample_active_mask` oracle the plans use) and GROWS
-the budget (one retrace) whenever a step would overflow — samples are
-never silently dropped, so served images are exact.
+Behavior change vs PR 4 (the `_requests` leak fix): `result(rid)` FREES
+the request's color buffer — a long-lived service no longer retains
+every completed request forever. A second `result()` on the same rid
+raises KeyError; throughput/latency stats survive retrieval in a bounded
+completed-request ring (`ServeConfig.completed_ring`).
 
 No threads: `step()`/`drain()` are synchronous and deterministic, which
 is what the throughput benchmark and the parity tests need. A network
@@ -22,16 +21,13 @@ front-end would own the event loop and call `submit`/`step`.
 from __future__ import annotations
 
 import dataclasses
-import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple, Union
+from typing import Dict, Optional, Union
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.hero.artifact import QuantArtifact
-from repro.nerf.fast_render import _frame_colors_impl
-from repro.nerf.occupancy import sample_active_mask
+from repro.hero.engine import ServeEngine
+from repro.hero.scheduler import EngineConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,17 +44,19 @@ class ServeConfig:
     budget_headroom: float = 1.5
     use_pallas: Union[str, bool] = "auto"
     early_stop: bool = True
+    # Completed-request stat records kept after `result()` frees a
+    # request (latency percentiles are computed over this ring).
+    completed_ring: int = 1024
 
-
-@dataclasses.dataclass
-class _Request:
-    rid: int
-    n_rays: int
-    n_items: int
-    colors: np.ndarray  # (n_rays, 3), filled as items complete
-    items_done: int = 0
-    t_submit: float = 0.0
-    t_done: Optional[float] = None
+    def engine_config(self, **overrides) -> EngineConfig:
+        """The equivalent `EngineConfig` (single-scene engines share every
+        knob; multi-scene extras like `cache_bytes` ride in overrides)."""
+        return EngineConfig(
+            slots=self.slots, slot_rays=self.slot_rays, budget=self.budget,
+            budget_headroom=self.budget_headroom, use_pallas=self.use_pallas,
+            early_stop=self.early_stop, completed_ring=self.completed_ring,
+            **overrides,
+        )
 
 
 class RenderService:
@@ -67,128 +65,51 @@ class RenderService:
     def __init__(self, artifact: QuantArtifact, cfg: ServeConfig = ServeConfig()):
         self.artifact = artifact
         self.cfg = cfg
-        self.rcfg = dataclasses.replace(artifact.rcfg, stratified=False)
-        self._spec = artifact.spec()
-        self._align = 128
-        self._budget = self._initial_budget()
-        self._queue: Deque[Tuple[int, int, np.ndarray, np.ndarray, int]] = deque()
-        self._requests: Dict[int, _Request] = {}
-        self._next_rid = 0
-        self._retraces = 0
-        self._steps = 0
-        self._t_first_submit: Optional[float] = None
-        self._t_last_done: Optional[float] = None
+        self._scene = artifact.scene
+        self._engine = ServeEngine({self._scene: artifact}, cfg.engine_config())
 
-    # ------------------------------------------------------------------
-    def _initial_budget(self) -> Optional[int]:
-        cap = self.cfg.slot_rays * self.rcfg.n_samples
-        b = self.cfg.budget
-        if b is None:
-            return None
-        if b == "auto":
-            occf = self.artifact.occ.occupied_fraction
-            est = cap * min(1.0, occf * self.cfg.budget_headroom)
-            est = int(np.ceil(max(est, 1) / self._align) * self._align)
-            return int(np.clip(est, self._align, cap))
-        return int(np.clip(int(b), self._align, cap))
+    @property
+    def engine(self) -> ServeEngine:
+        """The underlying serve engine (shared scheduler machinery)."""
+        return self._engine
 
     # ------------------------------------------------------------------
     def submit(self, rays_o, rays_d) -> int:
         """Enqueue one render request ((N, 3) rays); returns a request id."""
-        ro = np.asarray(rays_o, np.float32).reshape(-1, 3)
-        rd = np.asarray(rays_d, np.float32).reshape(-1, 3)
-        assert ro.shape == rd.shape, (ro.shape, rd.shape)
-        rid = self._next_rid
-        self._next_rid += 1
-        R = self.cfg.slot_rays
-        n_items = max(1, -(-ro.shape[0] // R))
-        now = time.perf_counter()
-        self._requests[rid] = _Request(
-            rid=rid, n_rays=ro.shape[0], n_items=n_items,
-            colors=np.zeros((ro.shape[0], 3), np.float32), t_submit=now,
-        )
-        if self._t_first_submit is None:
-            self._t_first_submit = now
-        for i in range(n_items):
-            s = i * R
-            self._queue.append((rid, s, ro[s:s + R], rd[s:s + R], i))
-        return rid
+        return self._engine.submit(rays_o, rays_d, scene=self._scene)
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return self._engine.pending
 
     @property
     def budget(self) -> Optional[int]:
-        return self._budget
+        return self._engine.budget_of(self._scene)
 
     @property
     def retraces(self) -> int:
-        return self._retraces
+        return self._engine.retraces
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """Render up to `slots` queued work items in one device call.
         Returns the number of work items completed (0 = queue empty)."""
-        if not self._queue:
-            return 0
-        S, R = self.cfg.slots, self.cfg.slot_rays
-        items = [self._queue.popleft() for _ in range(min(S, len(self._queue)))]
-
-        # Padding rays (empty slots / short items) originate far outside
-        # the scene box with zero direction: every sample is inactive, so
-        # padding consumes neither cull budget nor field compute.
-        ro = np.full((S, R, 3), 10.0, np.float32)
-        rd = np.zeros((S, R, 3), np.float32)
-        for slot, (_, _, o, d, _) in enumerate(items):
-            ro[slot, : o.shape[0]] = o
-            rd[slot, : d.shape[0]] = d
-
-        if self._budget is not None:
-            # Exactness guard: grow the static budget (one retrace) before
-            # a step could overflow and silently drop samples.
-            active, _ = sample_active_mask(self.artifact.occ, ro, rd, self.rcfg)
-            need = int(active.reshape(S, -1).sum(axis=1).max())
-            if need > self._budget:
-                self._budget = int(
-                    np.ceil(need * self.cfg.budget_headroom / self._align)
-                    * self._align
-                )
-                self._budget = min(self._budget, R * self.rcfg.n_samples)
-                self._retraces += 1
-
-        colors = np.asarray(_frame_colors_impl(
-            self.artifact.params, self.artifact.pack, self._spec,
-            self.artifact.occ, jnp.asarray(ro), jnp.asarray(rd),
-            cfg=self.artifact.cfg, rcfg=self.rcfg, mode="fused",
-            budget=self._budget, use_pallas=self.cfg.use_pallas,
-            early_stop=self.cfg.early_stop,
-        ))
-        self._steps += 1
-
-        now = time.perf_counter()
-        for slot, (rid, s, o, _, _) in enumerate(items):
-            req = self._requests[rid]
-            req.colors[s:s + o.shape[0]] = colors[slot, : o.shape[0]]
-            req.items_done += 1
-            if req.items_done == req.n_items:
-                req.t_done = now
-                self._t_last_done = now
-        return len(items)
+        return self._engine.step()
 
     def drain(self) -> None:
         """Process the queue until empty."""
-        while self.step():
-            pass
+        self._engine.drain()
 
     # ------------------------------------------------------------------
+    def poll(self, rid: int):
+        """Streaming: completed-but-not-yet-polled [(start, stop, colors)]
+        spans of a live request (see `ServeEngine.poll`)."""
+        return self._engine.poll(rid)
+
     def result(self, rid: int) -> np.ndarray:
-        """(N, 3) colors of a completed request."""
-        req = self._requests[rid]
-        if req.t_done is None:
-            raise ValueError(f"request {rid} is not complete "
-                             f"({req.items_done}/{req.n_items} items)")
-        return req.colors
+        """(N, 3) colors of a completed request. Retrieval frees the
+        request; a second call raises KeyError (module docstring)."""
+        return self._engine.result(rid)
 
     def render(self, rays_o, rays_d) -> np.ndarray:
         """Convenience: submit one request and drain the service."""
@@ -197,53 +118,19 @@ class RenderService:
         return self.result(rid)
 
     def warmup(self) -> None:
-        """Compile the render step outside any timed region."""
-        rid = self.submit(
-            np.zeros((self.cfg.slot_rays, 3), np.float32),
-            np.tile(np.asarray([[0.0, 0.0, 1.0]], np.float32),
-                    (self.cfg.slot_rays, 1)),
-        )
-        self.drain()
-        req = self._requests.pop(rid)  # excluded from stats
-        assert req.t_done is not None
-        # Stats describe served traffic only: the warmup's device step and
-        # any budget growth it provoked are setup, not service behavior.
-        self._steps = 0
-        self._retraces = 0
-        self._t_first_submit = None
-        self._t_last_done = None
+        """Compile the render step outside any timed region. Stats describe
+        served traffic only: the warmup's device step and any budget growth
+        it provoked are setup, not service behavior."""
+        self._engine.warmup()
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict:
-        """Throughput + latency percentiles over completed requests."""
-        done = [r for r in self._requests.values() if r.t_done is not None]
-        lat_ms = np.asarray(
-            [(r.t_done - r.t_submit) * 1e3 for r in done], np.float64
-        )
-        wall = (
-            (self._t_last_done - self._t_first_submit)
-            if done and self._t_first_submit is not None
-            else 0.0
-        )
-        rays = int(sum(r.n_rays for r in done))
-        return {
-            "requests_completed": len(done),
-            "rays_rendered": rays,
-            "device_steps": self._steps,
-            "wall_seconds": round(wall, 6),
-            "requests_per_sec": round(len(done) / wall, 4) if wall > 0 else None,
-            "rays_per_sec": round(rays / wall, 1) if wall > 0 else None,
-            "latency_ms": {
-                "mean": round(float(lat_ms.mean()), 3) if done else None,
-                "p50": round(float(np.percentile(lat_ms, 50)), 3) if done else None,
-                "p95": round(float(np.percentile(lat_ms, 95)), 3) if done else None,
-                "max": round(float(lat_ms.max()), 3) if done else None,
-            },
-            "sample_budget": self._budget,
-            "budget_retraces": self._retraces,
-            "slots": self.cfg.slots,
-            "slot_rays": self.cfg.slot_rays,
-        }
+        """Throughput + latency percentiles over completed requests (the
+        engine's counters, with the single-scene scalar budget fields the
+        PR-4 surface promised)."""
+        s = self._engine.stats()
+        s["sample_budget"] = self.budget
+        return s
 
 
 def serve(

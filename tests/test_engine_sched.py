@@ -1,0 +1,559 @@
+"""Deterministic scheduler simulation harness for the serve engine.
+
+Everything here drives `ServeEngine` purely through its injection seams —
+a fake counter clock and a scripted fake device step — so the suite runs
+with NO artifact compile and NO device render, asserts step-level traces
+EXACTLY (no sleeps, no wall-clock thresholds), and is order-independent
+(every test builds its own engine; there is no shared mutable state).
+
+Coverage:
+  * admission + request splitting + continuous batching across requests;
+  * multi-scene oldest-first bucket selection (exact event traces);
+  * fixed padded bucket shapes across scenes (the no-retrace seam);
+  * LRU artifact cache: load-on-miss, byte-budgeted eviction, hits,
+    protected (in-flight) scenes and budget overflow;
+  * streaming partial frames (`poll`/`partial` before the request drains);
+  * the `_requests`-leak fix (result() frees; bounded completed ring);
+  * exact latency stats from the injected clock;
+  * property tests (hypothesis shim) for the scheduler invariants:
+    every ray rendered exactly once, the globally-oldest item is in
+    every bucket (no starvation), eviction never drops in-flight work,
+    and conservation (submitted == completed + pending) at every step.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.hero.engine import ServeEngine
+from repro.hero.scheduler import EngineConfig, Scheduler, WorkItem
+
+
+# ---------------------------------------------------------------------------
+# Harness fakes
+# ---------------------------------------------------------------------------
+class FakeClock:
+    """Injectable monotonic counter — the only time source the engine sees."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class FakeArtifact:
+    """Just enough surface for the cache: a size."""
+
+    def __init__(self, scene: str, nbytes: int = 100):
+        self.scene = scene
+        self._nbytes = nbytes
+
+    def resident_bytes(self) -> int:
+        return self._nbytes
+
+
+def color_fn(ro: np.ndarray) -> np.ndarray:
+    """The scripted device output: a bijection of the input rays, so the
+    final request buffers prove correct scatter AND exactly-once render."""
+    return ro * 2.0 + 1.0
+
+
+class FakeDevice:
+    """Scripted device step: records every call, optionally charges the
+    fake clock a fixed per-step cost (simulated device time)."""
+
+    def __init__(self, clock: FakeClock = None, cost: float = 0.0):
+        self.clock = clock
+        self.cost = cost
+        self.calls = []  # (scene, ro, rd) per device step
+
+    def __call__(self, scene, artifact, ro, rd):
+        self.calls.append((scene, ro.copy(), rd.copy()))
+        if self.clock is not None and self.cost:
+            self.clock.advance(self.cost)
+        return color_fn(ro)
+
+
+def rays(rng, n):
+    ro = rng.uniform(-1.0, 1.0, size=(n, 3)).astype(np.float32)
+    rd = rng.uniform(-1.0, 1.0, size=(n, 3)).astype(np.float32)
+    return ro, rd
+
+
+def make_engine(scenes=("a",), cfg=None, *, loader=None, sizes=None, cost=0.0):
+    clk = FakeClock()
+    dev = FakeDevice(clk, cost=cost)
+    sizes = sizes or {}
+    arts = {s: FakeArtifact(s, sizes.get(s, 100)) for s in scenes}
+    cfg = cfg or EngineConfig(slots=2, slot_rays=4, trace_events=4096)
+    eng = ServeEngine(
+        arts or None, cfg, loader=loader, clock=clk, device_step=dev
+    )
+    return eng, clk, dev
+
+
+# ---------------------------------------------------------------------------
+# Admission + continuous batching across requests
+# ---------------------------------------------------------------------------
+def test_request_splitting_and_cross_request_batching():
+    """A bucket packs items of DIFFERENT requests (same scene) into one
+    device step — continuous batching across requests."""
+    cfg = EngineConfig(slots=3, slot_rays=4, trace_events=64)
+    eng, _, dev = make_engine(("a",), cfg)
+    rng = np.random.RandomState(0)
+    ro0, rd0 = rays(rng, 6)  # 2 items: [0:4], [4:6]
+    ro1, rd1 = rays(rng, 4)  # 1 item
+    r0 = eng.submit(ro0, rd0, scene="a")
+    r1 = eng.submit(ro1, rd1, scene="a")
+    assert eng.pending == 3
+
+    assert eng.step() == 3  # one device call serves both requests
+    assert len(dev.calls) == 1
+    assert eng.events == [
+        ("submit", r0, "a", 2),
+        ("submit", r1, "a", 1),
+        ("bucket", "a", ((r0, 0), (r0, 1), (r1, 0))),
+        ("complete", r0),
+        ("complete", r1),
+    ]
+    np.testing.assert_array_equal(eng.result(r0), color_fn(ro0))
+    np.testing.assert_array_equal(eng.result(r1), color_fn(ro1))
+
+
+def test_short_item_padding_is_masked_out():
+    """Items shorter than slot_rays scatter only their own rays; padding
+    slots carry the far-origin marker rays."""
+    cfg = EngineConfig(slots=2, slot_rays=4, trace_events=16)
+    eng, _, dev = make_engine(("a",), cfg)
+    rng = np.random.RandomState(1)
+    ro, rd = rays(rng, 3)  # one short item
+    rid = eng.submit(ro, rd, scene="a")
+    eng.step()
+    (scene, dro, drd), = dev.calls
+    assert dro.shape == (2, 4, 3)
+    np.testing.assert_array_equal(dro[0, :3], ro)
+    assert np.all(dro[0, 3:] == 10.0)  # item padding
+    assert np.all(dro[1] == 10.0)  # empty slot padding
+    assert np.all(drd[1] == 0.0)
+    out = eng.result(rid)
+    assert out.shape == (3, 3)
+    np.testing.assert_array_equal(out, color_fn(ro))
+
+
+def test_submit_scene_resolution_and_unknown_scene():
+    eng, _, _ = make_engine(("a",))
+    rng = np.random.RandomState(2)
+    ro, rd = rays(rng, 2)
+    rid = eng.submit(ro, rd)  # scene=None -> the single resident scene
+    eng.drain()
+    np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+    # Unknown scene without a loader can never be served: fail at submit.
+    with pytest.raises(ValueError, match="no loader"):
+        eng.submit(ro, rd, scene="nope")
+    # Two resident scenes: scene=None is ambiguous.
+    eng2, _, _ = make_engine(("a", "b"))
+    with pytest.raises(ValueError, match="exactly one"):
+        eng2.submit(ro, rd)
+
+
+# ---------------------------------------------------------------------------
+# Multi-scene bucket selection
+# ---------------------------------------------------------------------------
+def test_multi_scene_oldest_first_exact_trace():
+    """Buckets are single-scene and always serve the scene holding the
+    globally-oldest queued item — asserted as an exact event trace."""
+    cfg = EngineConfig(slots=2, slot_rays=4, trace_events=64)
+    eng, clk, dev = make_engine(("A", "B"), cfg)
+    rng = np.random.RandomState(3)
+    roA, rdA = rays(rng, 8)
+    roB, rdB = rays(rng, 8)
+    roA2, rdA2 = rays(rng, 4)
+    r0 = eng.submit(roA, rdA, scene="A")
+    clk.advance(1.0)
+    r1 = eng.submit(roB, rdB, scene="B")
+    clk.advance(1.0)
+    r2 = eng.submit(roA2, rdA2, scene="A")
+
+    eng.drain()
+    assert eng.events == [
+        ("submit", r0, "A", 2),
+        ("submit", r1, "B", 2),
+        ("submit", r2, "A", 1),
+        ("bucket", "A", ((r0, 0), (r0, 1))),
+        ("complete", r0),
+        ("bucket", "B", ((r1, 0), (r1, 1))),
+        ("complete", r1),
+        ("bucket", "A", ((r2, 0),)),
+        ("complete", r2),
+    ]
+    assert [c[0] for c in dev.calls] == ["A", "B", "A"]
+    np.testing.assert_array_equal(eng.result(r1), color_fn(roB))
+
+
+def test_padded_bucket_shape_is_constant_across_scenes():
+    """Every device call sees the SAME (slots, slot_rays, 3) padded shape
+    no matter which scene or how full the bucket — the seam that lets
+    mixed-scene serving reuse compiled traces instead of retracing."""
+    cfg = EngineConfig(slots=3, slot_rays=5, trace_events=256)
+    eng, _, dev = make_engine(("A", "B", "C"), cfg)
+    rng = np.random.RandomState(4)
+    for scene, n in [("A", 1), ("B", 14), ("C", 5), ("A", 2), ("B", 3)]:
+        ro, rd = rays(rng, n)
+        eng.submit(ro, rd, scene=scene)
+    eng.drain()
+    # A's two requests batch into one bucket; B takes two (3 + 1 items).
+    assert [c[0] for c in dev.calls] == ["A", "B", "C", "B"]
+    for _, ro, rd in dev.calls:
+        assert ro.shape == (3, 5, 3) and rd.shape == (3, 5, 3)
+
+
+# ---------------------------------------------------------------------------
+# LRU artifact cache
+# ---------------------------------------------------------------------------
+def test_lru_load_on_miss_and_byte_budget_eviction():
+    """Cache misses load through the injected loader; the byte budget
+    evicts LRU-first; a resident re-use is a hit — exact event trace."""
+    loads = []
+
+    def loader(scene):
+        loads.append(scene)
+        return FakeArtifact(scene, 100)
+
+    cfg = EngineConfig(slots=1, slot_rays=4, cache_bytes=250, trace_events=256)
+    eng, _, _ = make_engine((), cfg, loader=loader)
+    rng = np.random.RandomState(5)
+
+    def serve_one(scene):
+        ro, rd = rays(rng, 4)
+        rid = eng.submit(ro, rd, scene=scene)
+        eng.drain()
+        return eng.result(rid)
+
+    serve_one("a")  # load a               resident: [a]
+    serve_one("b")  # load b               resident: [a, b]
+    serve_one("c")  # evict a (LRU), load  resident: [b, c]
+    serve_one("a")  # evict b, load a      resident: [c, a]
+    serve_one("c")  # hit                  resident: [a, c] (touched)
+
+    assert loads == ["a", "b", "c", "a"]
+    cache_events = [e for e in eng.events if e[0] in ("load", "evict")]
+    assert cache_events == [
+        ("load", "a", 100),
+        ("load", "b", 100),
+        ("evict", "a", 100),
+        ("load", "c", 100),
+        ("evict", "b", 100),
+        ("load", "a", 100),
+    ]
+    st_ = eng.stats()["cache"]
+    assert st_["loads"] == 4 and st_["evictions"] == 2 and st_["hits"] == 1
+    assert st_["resident_bytes"] == 200 and st_["capacity_bytes"] == 250
+    assert eng.resident_scenes == ["a", "c"]  # LRU -> MRU
+
+
+def test_eviction_never_drops_scene_with_inflight_work():
+    """A scene with queued items is protected: under byte pressure the
+    cache runs over budget (counted) rather than evicting it."""
+
+    def loader(scene):
+        return FakeArtifact(scene, 100)
+
+    cfg = EngineConfig(slots=1, slot_rays=4, cache_bytes=100, trace_events=256)
+    eng, _, dev = make_engine((), cfg, loader=loader)
+    rng = np.random.RandomState(6)
+    roa, rda = rays(rng, 4)
+    rob, rdb = rays(rng, 4)
+    roa2, rda2 = rays(rng, 4)
+    ra = eng.submit(roa, rda, scene="a")
+    rb = eng.submit(rob, rdb, scene="b")
+    ra2 = eng.submit(roa2, rda2, scene="a")
+
+    eng.step()  # serves a's first item; a STILL has ra2 queued
+    eng.step()  # oldest is b: loading b may NOT evict a (in-flight work)
+    assert [c[0] for c in dev.calls] == ["a", "b"]
+    assert not any(e[0] == "evict" for e in eng.events)
+    assert eng.stats()["cache"]["overflows"] == 1
+    assert set(eng.resident_scenes) == {"a", "b"}  # over budget, by design
+
+    eng.drain()
+    for rid, ro in [(ra, roa), (rb, rob), (ra2, roa2)]:
+        np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+
+
+# ---------------------------------------------------------------------------
+# Streaming partial frames
+# ---------------------------------------------------------------------------
+def test_streaming_polls_spans_as_steps_land():
+    """Completed work items surface through poll() step by step, BEFORE
+    the request drains; partial() tracks the done mask; spans are never
+    repeated."""
+    cfg = EngineConfig(slots=1, slot_rays=4, trace_events=64)
+    eng, _, _ = make_engine(("a",), cfg)
+    rng = np.random.RandomState(7)
+    ro, rd = rays(rng, 11)  # 3 items: [0:4], [4:8], [8:11]
+    rid = eng.submit(ro, rd, scene="a")
+
+    assert eng.poll(rid) == []  # nothing rendered yet
+    eng.step()
+    spans = eng.poll(rid)
+    assert [(s, e) for s, e, _ in spans] == [(0, 4)]
+    np.testing.assert_array_equal(spans[0][2], color_fn(ro[0:4]))
+    assert eng.poll(rid) == []  # spans are not repeated
+
+    eng.step()
+    colors, done = eng.partial(rid)
+    assert done.tolist() == [True] * 8 + [False] * 3
+    np.testing.assert_array_equal(colors[:8], color_fn(ro[:8]))
+    assert [(s, e) for s, e, _ in eng.poll(rid)] == [(4, 8)]
+
+    with pytest.raises(ValueError, match="not complete"):
+        eng.result(rid)
+    eng.step()
+    assert [(s, e) for s, e, _ in eng.poll(rid)] == [(8, 11)]
+    np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+    with pytest.raises(KeyError):  # freed on retrieval
+        eng.poll(rid)
+
+
+# ---------------------------------------------------------------------------
+# The _requests leak fix + bounded completed ring
+# ---------------------------------------------------------------------------
+def test_result_frees_requests_and_ring_stays_bounded():
+    """Long-lived engine: retrieval frees the request buffer; stats keep
+    counting through a bounded ring — the `_requests` leak regression."""
+    cfg = EngineConfig(slots=2, slot_rays=4, completed_ring=4, trace_events=0)
+    eng, clk, _ = make_engine(("a",), cfg)
+    rng = np.random.RandomState(8)
+    for i in range(10):
+        ro, rd = rays(rng, 4)
+        rid = eng.submit(ro, rd, scene="a")
+        clk.advance(0.25)
+        eng.drain()
+        np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+        with pytest.raises(KeyError, match="already retrieved"):
+            eng.result(rid)
+
+    assert len(eng._requests) == 0  # nothing retained after retrieval
+    assert len(eng._ring) == 4  # bounded stat ring
+    st_ = eng.stats()
+    assert st_["requests_completed"] == 10  # counters see ALL completions
+    assert st_["requests_pending"] == 0
+    assert st_["latency_ms"]["p50"] is not None
+
+
+def test_exact_latency_stats_from_injected_clock():
+    """Latency percentiles are exact functions of the fake clock — no
+    wall-clock tolerance anywhere."""
+    cfg = EngineConfig(slots=1, slot_rays=4, trace_events=0)
+    eng, clk, _ = make_engine(("a",), cfg, cost=1.0)  # each step costs 1s
+    rng = np.random.RandomState(9)
+    ro0, rd0 = rays(rng, 4)
+    ro1, rd1 = rays(rng, 4)
+    r0 = eng.submit(ro0, rd0, scene="a")  # t_submit = 0
+    r1 = eng.submit(ro1, rd1, scene="a")  # t_submit = 0
+    eng.step()  # r0 done at t=1 -> 1000 ms
+    eng.step()  # r1 done at t=2 -> 2000 ms
+    st_ = eng.stats()
+    assert st_["latency_ms"] == {
+        "mean": 1500.0, "p50": 1500.0, "p95": 1950.0, "max": 2000.0,
+    }
+    assert st_["wall_seconds"] == 2.0
+    assert st_["requests_per_sec"] == 1.0
+    assert st_["rays_per_sec"] == 4.0
+    eng.result(r0), eng.result(r1)
+
+
+def test_warmup_resets_stats_but_not_state():
+    cfg = EngineConfig(slots=1, slot_rays=4, trace_events=64)
+    eng, clk, dev = make_engine(("a", "b"), cfg, cost=0.5)
+    eng.warmup()  # one dummy request per resident scene
+    assert len(dev.calls) == 2
+    st_ = eng.stats()
+    assert st_["requests_completed"] == 0 and st_["device_steps"] == 0
+    assert st_["items_submitted"] == 0 and st_["rays_rendered"] == 0
+    assert eng.events == []  # trace cleared with the stats
+    rng = np.random.RandomState(10)
+    ro, rd = rays(rng, 4)
+    rid = eng.submit(ro, rd, scene="a")
+    eng.drain()
+    eng.result(rid)
+    assert eng.stats()["requests_completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler unit invariants (no engine)
+# ---------------------------------------------------------------------------
+def test_scheduler_bucket_is_single_scene_and_oldest_first():
+    sched = Scheduler(slots=3)
+
+    def item(scene, rid, seq):
+        o = sched.next_order()
+        return WorkItem(
+            rid=rid, scene=scene, seq=seq, start=0, stop=4,
+            rays_o=np.zeros((4, 3), np.float32),
+            rays_d=np.zeros((4, 3), np.float32), order=o, t_enqueue=0.0,
+        )
+
+    sched.push(item("x", 0, 0))
+    sched.push(item("y", 1, 0))
+    sched.push(item("x", 2, 0))
+    assert sched.oldest_scene() == "x"
+    scene, items = sched.take_bucket()
+    assert scene == "x" and [(i.rid, i.seq) for i in items] == [(0, 0), (2, 0)]
+    scene, items = sched.take_bucket()
+    assert scene == "y" and [(i.rid, i.seq) for i in items] == [(1, 0)]
+    assert sched.take_bucket() == (None, [])
+    assert sched.items_submitted == 3 and sched.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests: scheduler invariants under arbitrary arrival orders
+# ---------------------------------------------------------------------------
+SCENE_SIZES = {"a": 100, "b": 120, "c": 80}
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_property_scheduler_invariants(seed):
+    """Random submit/step interleavings over three scenes with a tight
+    cache byte budget. Invariants asserted against an INDEPENDENT shadow
+    model of the queues:
+
+      1. every bucket is single-scene, FIFO-prefix of that scene's queue,
+         and comes from the scene holding the globally-oldest item
+         (no starvation: the oldest item is in every bucket);
+      2. every submitted (rid, item) is rendered exactly once, and every
+         request's final colors equal the scripted transform of its rays;
+      3. eviction only ever drops scenes with zero queued work;
+      4. conservation after every operation:
+         items submitted == rendered + pending (same for requests/rays).
+    """
+    rng = np.random.RandomState(seed)
+    slots = 1 + int(rng.randint(3))
+    slot_rays = 2 + int(rng.randint(5))
+    cfg = EngineConfig(
+        slots=slots, slot_rays=slot_rays,
+        cache_bytes=220, completed_ring=64, trace_events=100_000,
+    )
+    clk = FakeClock()
+    dev = FakeDevice(clk, cost=0.125)
+    eng = ServeEngine(
+        None, cfg, loader=lambda s: FakeArtifact(s, SCENE_SIZES[s]),
+        clock=clk, device_step=dev,
+    )
+
+    scenes = list(SCENE_SIZES)
+    shadow = {s: [] for s in scenes}  # scene -> [(order, rid, seq)]
+    order = 0
+    submitted = {}  # rid -> rays_o
+    served = []  # (rid, seq) per bucket membership
+    ev_idx = 0
+
+    def check_new_events_and_conservation():
+        nonlocal ev_idx
+        for ev in eng.events[ev_idx:]:
+            if ev[0] == "evict":
+                # invariant 3: never evict a scene with queued work
+                assert shadow[ev[1]] == [], ev
+            elif ev[0] == "bucket":
+                _, scene, items = ev
+                q = shadow[scene]
+                # invariant 1: FIFO prefix of the single selected scene...
+                assert list(items) == [(r, s) for _, r, s in q[: len(items)]]
+                # ...and that scene holds the globally-oldest queued item.
+                heads = [q2[0][0] for q2 in shadow.values() if q2]
+                assert q[0][0] == min(heads)
+                served.extend(items)
+                del q[: len(items)]
+        ev_idx = len(eng.events)
+        st_ = eng.stats()  # invariant 4: conservation, every single op
+        assert st_["items_submitted"] == st_["items_rendered"] + st_["items_pending"]
+        assert st_["rays_submitted"] == st_["rays_rendered"] + st_["rays_pending"]
+        assert st_["requests_submitted"] == (
+            st_["requests_completed"] + st_["requests_pending"]
+        )
+        assert st_["items_pending"] == sum(len(q) for q in shadow.values())
+
+    for _ in range(40):
+        if rng.rand() < 0.55:
+            scene = scenes[int(rng.randint(len(scenes)))]
+            n = 1 + int(rng.randint(3 * slot_rays))
+            ro, rd = rays(rng, n)
+            rid = eng.submit(ro, rd, scene=scene)
+            submitted[rid] = ro
+            n_items = max(1, -(-n // slot_rays))
+            for i in range(n_items):
+                shadow[scene].append((order, rid, i))
+                order += 1
+            clk.advance(0.0625)
+        else:
+            eng.step()
+        check_new_events_and_conservation()
+
+    while eng.step():
+        check_new_events_and_conservation()
+    check_new_events_and_conservation()
+
+    # invariant 2: exactly once, correct scatter
+    expect = [
+        (rid, i)
+        for rid, ro in submitted.items()
+        for i in range(max(1, -(-len(ro) // slot_rays)))
+    ]
+    assert sorted(served) == sorted(expect)
+    assert len(served) == len(set(served))
+    for rid, ro in submitted.items():
+        np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+    assert len(eng._requests) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_property_no_starvation_wait_bounded_by_backlog(seed):
+    """Oldest-first means a request never waits on work submitted after
+    it. Every bucket's head is the globally-oldest queued item, so each
+    device step retires at least one item older than any given queued
+    item — a request therefore completes within
+
+        (queued items at its submission) + (its own item count)
+
+    steps, regardless of what arrives later. No wall-clock, no slack."""
+    rng = np.random.RandomState(seed)
+    cfg = EngineConfig(slots=2, slot_rays=4, trace_events=100_000)
+    eng, _, _ = make_engine(("a", "b"), cfg)
+    steps = 0
+    info = {}  # rid -> (backlog items at submit, own items, step at submit)
+    done_step = {}
+    ev_idx = 0
+
+    def do_step():
+        nonlocal steps, ev_idx
+        if eng.step():
+            steps += 1
+        for ev in eng.events[ev_idx:]:
+            if ev[0] == "complete":
+                done_step[ev[1]] = steps
+        ev_idx = len(eng.events)
+
+    for _ in range(60):
+        if rng.rand() < 0.6:
+            scene = ("a", "b")[int(rng.randint(2))]
+            n = 1 + int(rng.randint(10))
+            ro, rd = rays(rng, n)
+            backlog = eng.pending
+            rid = eng.submit(ro, rd, scene=scene)
+            info[rid] = (backlog, -(-n // cfg.slot_rays), steps)
+        else:
+            do_step()
+    while eng.pending:
+        do_step()
+
+    assert set(done_step) == set(info)  # nothing starved outright
+    for rid, (backlog, n_items, step0) in info.items():
+        assert done_step[rid] - step0 <= backlog + n_items, (
+            rid, done_step[rid], step0, backlog, n_items,
+        )

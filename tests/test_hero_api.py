@@ -384,6 +384,116 @@ def test_service_budget_grows_instead_of_dropping(tiny_artifact):
     np.testing.assert_allclose(out, exact, atol=1e-6)
 
 
+def test_service_result_frees_request_state(tiny_artifact):
+    """The `_requests` leak regression: a long-lived service must not
+    retain completed requests after retrieval. `result()` frees the
+    buffer (second call raises), while throughput stats keep counting
+    through the bounded completed ring."""
+    svc = hero.serve(
+        tiny_artifact,
+        ServeConfig(slots=1, slot_rays=16, completed_ring=8),
+        warmup=False,
+    )
+    rng = np.random.RandomState(13)
+    for i in range(12):
+        ro = rng.uniform(-0.3, 0.3, size=(4, 3)).astype(np.float32)
+        rd = rng.normal(size=(4, 3)).astype(np.float32)
+        rd /= np.linalg.norm(rd, axis=-1, keepdims=True)
+        rid = svc.submit(ro, rd)
+        svc.drain()
+        assert svc.result(rid).shape == (4, 3)
+        with pytest.raises(KeyError, match="already retrieved"):
+            svc.result(rid)
+    assert len(svc.engine._requests) == 0  # nothing retained
+    assert len(svc.engine._ring) == 8  # ring bounded at completed_ring
+    stats = svc.stats()
+    assert stats["requests_completed"] == 12  # counters saw every request
+    assert stats["requests_pending"] == 0
+    assert stats["latency_ms"]["p95"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Multi-scene engine: mixed-stream parity with the synchronous service
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_artifact_lego():
+    """A second tiny scene so the engine tests mix two artifacts."""
+    env = build_scene_env("lego", TINY, seed=1)
+    rng = np.random.RandomState(5)
+    bits = rng.randint(4, 9, size=env.n_units).tolist()
+    return hero.compile(env, bits)
+
+
+def test_engine_mixed_scene_stream_byte_identical_to_sync_service(
+    tiny_artifact, tiny_artifact_lego
+):
+    """Acceptance pin: an interleaved 2-scene request stream through the
+    multi-scene engine produces BYTE-IDENTICAL colors (0.0000 dB) to
+    draining each scene through its own synchronous RenderService.
+
+    Both paths use the same explicit static budget (`None` = uncapped,
+    retrace-free), so the device computation is the same jitted function
+    over the same per-slot inputs — co-batching across requests and
+    scenes must not change a single bit of any request's output.
+    """
+    arts = {a.scene: a for a in (tiny_artifact, tiny_artifact_lego)}
+    cfg = ServeConfig(slots=2, slot_rays=32, budget=None)
+    eng = hero.serve(arts, cfg)  # -> multi-scene ServeEngine
+    assert sorted(eng.resident_scenes) == ["chair", "lego"]
+
+    rng = np.random.RandomState(11)
+    reqs = []
+    for i in range(6):  # chair/lego interleaved, ragged sizes
+        scene = ("chair", "lego")[i % 2]
+        n = (40, 17, 64)[i % 3]
+        ro = rng.uniform(-0.4, 0.4, size=(n, 3)).astype(np.float32)
+        rd = rng.normal(size=(n, 3)).astype(np.float32)
+        rd /= np.linalg.norm(rd, axis=-1, keepdims=True)
+        reqs.append((eng.submit(ro, rd, scene=scene), scene, ro, rd))
+    eng.drain()
+
+    sync = {s: hero.serve(a, cfg, warmup=False) for s, a in arts.items()}
+    for rid, scene, ro, rd in reqs:
+        got = eng.result(rid)
+        want = sync[scene].render(ro, rd)
+        np.testing.assert_array_equal(got, want)  # byte-identical
+
+    stats = eng.stats()
+    assert stats["requests_completed"] == len(reqs)
+    assert sorted(stats["scenes"]) == ["chair", "lego"]
+    assert stats["cache"]["resident"] and stats["cache"]["evictions"] == 0
+
+
+def test_engine_lru_cache_serves_from_loader(tiny_artifact, tmp_path):
+    """`hero.serve` with no resident artifacts + a loader: requests for a
+    non-resident scene load on miss and render correctly end to end."""
+    path = tiny_artifact.save(tmp_path / "art")
+    loads = []
+
+    def loader(scene):
+        assert scene == tiny_artifact.scene
+        loads.append(scene)
+        return hero.QuantArtifact.load(path)
+
+    eng = hero.serve(
+        {}, ServeConfig(slots=2, slot_rays=32, budget=None),
+        loader=loader, warmup=False,
+    )
+    rng = np.random.RandomState(17)
+    ro = rng.uniform(-0.4, 0.4, size=(20, 3)).astype(np.float32)
+    rd = rng.normal(size=(20, 3)).astype(np.float32)
+    rd /= np.linalg.norm(rd, axis=-1, keepdims=True)
+    got = eng.render(ro, rd, scene=tiny_artifact.scene)
+    assert loads == [tiny_artifact.scene]  # loaded exactly once
+    want = hero.serve(
+        tiny_artifact, ServeConfig(slots=2, slot_rays=32, budget=None),
+        warmup=False,
+    ).render(ro, rd)
+    np.testing.assert_array_equal(got, want)
+    assert eng.stats()["cache"]["loads"] == 1
+    assert eng.stats()["cache"]["resident_bytes"] > 0  # real payload size
+
+
 # ---------------------------------------------------------------------------
 # model_bytes exactness: frontier objective == stored payload == disk bytes
 # ---------------------------------------------------------------------------
