@@ -38,7 +38,8 @@ def run_quick(scenes, budgets, seed: int = 0, verbose: bool = True):
         population=8,
         verbose=verbose,
     )
-    return HeroSearchRun(cfg).run(), cfg
+    run = HeroSearchRun(cfg)
+    return run.run(), cfg, run
 
 
 def run_standard(scenes, budgets, seed: int = 0, verbose: bool = True):
@@ -51,7 +52,49 @@ def run_standard(scenes, budgets, seed: int = 0, verbose: bool = True):
         population=16,
         verbose=verbose,
     )
-    return HeroSearchRun(cfg).run(), cfg
+    run = HeroSearchRun(cfg)
+    return run.run(), cfg, run
+
+
+def run_recovery(cfg, bundles, chaos_seed: int = 0) -> dict:
+    """Recovery-overhead lane: the same sweep through the orchestrator,
+    once clean and once with a seeded fault plan (one injected fault),
+    both on pre-trained bundles so the timed region is pure search. The
+    chaos run must land on the IDENTICAL frontier — recovery is retry,
+    never silent result drift — and its wall-clock overhead is the price
+    of one retried cell (ideal: (cells+1)/cells, e.g. 1.25 on a 2x2
+    sweep)."""
+    import dataclasses
+    import time
+
+    from repro.distributed.orchestrator import run_orchestrated
+
+    cfg = dataclasses.replace(cfg, checkpoint_path=None, verbose=False)
+
+    t0 = time.perf_counter()
+    clean = run_orchestrated(
+        HeroSearchRun(cfg, bundles), workers=1, worker_kind="inline"
+    )
+    clean_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    chaos = run_orchestrated(
+        HeroSearchRun(cfg, bundles), workers=1, worker_kind="inline",
+        chaos_seed=chaos_seed, chaos_faults=1,
+    )
+    chaos_s = time.perf_counter() - t0
+
+    identical = (
+        clean.frontier.objective_set() == chaos.frontier.objective_set()
+        and clean.hypervolume() == chaos.hypervolume()
+    )
+    return {
+        "clean_seconds": round(clean_s, 4),
+        "chaos_seconds": round(chaos_s, 4),
+        "overhead_ratio": round(chaos_s / max(clean_s, 1e-9), 4),
+        "frontier_identical": identical,
+        "chaos_seed": chaos_seed,
+    }
 
 
 def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
@@ -82,14 +125,23 @@ def main(argv=None):
                     help="baseline BENCH_search.json to gate against")
     ap.add_argument("--max-drop", type=float, default=0.2,
                     help="max fractional policies/sec drop vs baseline")
+    ap.add_argument("--recovery", action="store_true",
+                    help="also run the orchestrated recovery-overhead lane "
+                         "(clean vs one-injected-fault sweep); gates on "
+                         "frontier identity and overhead <= --max-overhead")
+    ap.add_argument("--max-overhead", type=float, default=1.5,
+                    help="max chaos/clean wall-clock ratio for --recovery")
     args = ap.parse_args(argv)
 
     scenes = [s for s in args.scenes.split(",") if s]
     budgets = [float(b) for b in args.budgets.split(",") if b]
     runner = run_quick if args.quick else run_standard
-    result, cfg = runner(scenes, budgets, seed=args.seed)
+    result, cfg, run = runner(scenes, budgets, seed=args.seed)
 
     report = bench_report(result, cfg)
+    if args.recovery:
+        bundles = {s: run.bundle(s) for s in cfg.scenes}
+        report["recovery"] = run_recovery(cfg, bundles, chaos_seed=args.seed)
     Path(args.out).write_text(json.dumps(report, indent=2))
 
     print(f"\n== closed-loop search ({'quick' if args.quick else 'standard'}"
@@ -100,6 +152,12 @@ def main(argv=None):
           f"(HV {report['frontier_hypervolume']:.4f})")
     print(f"  sec to fixed-{report['fixed_bit_reference']}bit:   "
           f"{report['seconds_to_fixed_bit']}")
+    if args.recovery:
+        rec = report["recovery"]
+        print(f"  recovery overhead:   {rec['overhead_ratio']:.2f}x "
+              f"({rec['chaos_seconds']:.1f}s chaos / "
+              f"{rec['clean_seconds']:.1f}s clean), frontier identical: "
+              f"{rec['frontier_identical']}")
     print(f"  wrote {args.out}")
 
     if not (report["frontier_valid_vs_8bit"] and report["frontier_size"] > 0):
@@ -110,6 +168,17 @@ def main(argv=None):
         report, args.check_baseline, args.max_drop
     ):
         return 1
+    if args.recovery:
+        rec = report["recovery"]
+        if not rec["frontier_identical"]:
+            print("[bench-search] RECOVERY DRIFTED THE FRONTIER — retry "
+                  "must be result-neutral", file=sys.stderr)
+            return 1
+        if rec["overhead_ratio"] > args.max_overhead:
+            print(f"[bench-search] recovery overhead "
+                  f"{rec['overhead_ratio']:.2f}x exceeds "
+                  f"{args.max_overhead:.2f}x", file=sys.stderr)
+            return 1
     return 0
 
 

@@ -30,8 +30,9 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -264,6 +265,138 @@ class ClosedLoopConfig:
         }
 
 
+# ---------------------------------------------------------------------------
+# Cell leasing: the unit of distribution
+# ---------------------------------------------------------------------------
+# Checkpoint schema: v2 stores per-cell outputs (plus the scene-level
+# constants needed to merge them) instead of the merged frontier, so a
+# resumed run — or an out-of-order orchestrated run — rebuilds the joint
+# frontier by replaying cell merges in CANONICAL cell order and is exactly
+# equal to the uninterrupted sequential run. Unknown/older versions are
+# quarantined like corrupt files (the frontier state they carry cannot be
+# replayed).
+CHECKPOINT_VERSION = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One (scene, budget) cell — the unit of work the sequential loop and
+    the elastic orchestrator (`repro.distributed.orchestrator`) both lease,
+    execute, retry, and checkpoint."""
+
+    scene: str
+    scene_idx: int
+    budget_idx: int
+    budget_frac: float
+    seed: int
+
+    @property
+    def name(self) -> str:
+        return _cell_name(self.scene, self.budget_frac)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "CellSpec":
+        return CellSpec(**d)
+
+
+@dataclasses.dataclass
+class CellOutput:
+    """Everything one executed cell contributes to the run, as plain data
+    (JSON round-trip), so a cell can run on another thread/worker/process
+    and be merged later: the evaluated points in emission order — each with
+    the cumulative in-cell evaluation seconds at emission (`t_emit`), the
+    time base of `seconds_to_fixed_bit` — plus the search summary."""
+
+    cell: str
+    scene: str
+    budget_frac: float
+    latency_target: float
+    seed: int
+    best_reward: float
+    best_bits: List[int]
+    policies_evaluated: int
+    wall_seconds: float
+    sharded: bool
+    points: List[Dict]
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "CellOutput":
+        return CellOutput(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneMeta:
+    """Scene-level constants the merge needs — the 8-bit anchor/baselines
+    (the joint frontier's normalization) and the uniform fixed-bit
+    competitor — as plain data, so a resumed run can replay checkpointed
+    cell outputs WITHOUT rebuilding (re-training) the scene bundle."""
+
+    scene: str
+    n_units: int
+    baseline_latency: float
+    baseline_psnr: float
+    baseline_bytes: float
+    fixed_bits: int
+    fixed_latency: float
+    fixed_psnr: float
+    fixed_bytes: float
+
+    @staticmethod
+    def from_bundle(bundle: "SceneBundle", fixed: ParetoPoint) -> "SceneMeta":
+        return SceneMeta(
+            scene=bundle.scene,
+            n_units=bundle.env.n_units,
+            baseline_latency=bundle.baseline_latency,
+            baseline_psnr=bundle.baseline_psnr,
+            baseline_bytes=bundle.baseline_bytes,
+            fixed_bits=int(fixed.bits[0]),
+            fixed_latency=fixed.latency,
+            fixed_psnr=fixed.psnr,
+            fixed_bytes=fixed.model_bytes,
+        )
+
+    def baseline_point(self) -> ParetoPoint:
+        return ParetoPoint(
+            latency=self.baseline_latency,
+            psnr=self.baseline_psnr,
+            model_bytes=self.baseline_bytes,
+            bits=tuple([8] * self.n_units),
+            scene=self.scene,
+            reward=0.0,
+        )
+
+    def fixed_point(self) -> ParetoPoint:
+        return ParetoPoint(
+            latency=self.fixed_latency,
+            psnr=self.fixed_psnr,
+            model_bytes=self.fixed_bytes,
+            bits=tuple([self.fixed_bits] * self.n_units),
+            scene=self.scene,
+        )
+
+    def normalize(self, p: ParetoPoint) -> ParetoPoint:
+        """Identical to `SceneBundle.normalize` (raw -> scene-normalized)."""
+        return dataclasses.replace(
+            p,
+            latency=p.latency / self.baseline_latency,
+            psnr=p.psnr - self.baseline_psnr,
+            model_bytes=p.model_bytes / self.baseline_bytes,
+        )
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "SceneMeta":
+        return SceneMeta(**d)
+
+
 @dataclasses.dataclass
 class CellResult:
     """Summary of one (scene, budget) population search."""
@@ -336,6 +469,10 @@ class HeroSearchRun:
         self.cfg = cfg
         self._bundles: Dict[str, SceneBundle] = dict(bundles or {})
         self._target = target
+        # Scene merge constants, gathered from built bundles or restored
+        # from a checkpoint (whichever happens first wins — they are equal
+        # by construction, both derive from the same seeded training).
+        self._scene_meta: Dict[str, SceneMeta] = {}
 
     # ------------------------------------------------------------------
     def bundle(self, scene: str) -> SceneBundle:
@@ -349,7 +486,12 @@ class HeroSearchRun:
                 hardware=self._target if self._target is not None
                 else self.cfg.hardware,
             )
-        return self._bundles[scene]
+        b = self._bundles[scene]
+        if scene not in self._scene_meta:
+            self._scene_meta[scene] = SceneMeta.from_bundle(
+                b, self._fixed_bit_point(b)
+            )
+        return b
 
     def _scene_seed(self, scene: str) -> int:
         return self.cfg.seed * 1000 + self.cfg.scenes.index(scene)
@@ -376,11 +518,43 @@ class HeroSearchRun:
             fp["hardware"] = self._target.describe()
         return fp
 
+    def _quarantine_checkpoint(self, path: str, why: str) -> None:
+        """A checkpoint that cannot be parsed/replayed must not crash the
+        sweep OR be silently reused: move it aside (audit trail), warn,
+        and let the run restart its cells cleanly."""
+        corrupt = f"{path}.corrupt"
+        os.replace(path, corrupt)
+        warnings.warn(
+            f"checkpoint {path} is unusable ({why}); quarantined to "
+            f"{corrupt} — restarting cells from scratch",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        if self.cfg.verbose:
+            print(f"[closed-loop] quarantined corrupt checkpoint -> "
+                  f"{corrupt}", flush=True)
+
     def _load_checkpoint(self) -> Optional[Dict]:
+        """Parse + validate the checkpoint. Corrupt files (torn writes,
+        truncation, garbage) and unknown schema versions are quarantined
+        to `<path>.corrupt` (fresh start); a config-fingerprint mismatch
+        still REFUSES loudly — silently discarding a valid checkpoint of
+        a different run would be data loss, not robustness."""
         path = self.cfg.checkpoint_path
         if not path or not Path(path).exists():
             return None
-        state = json.loads(Path(path).read_text())
+        try:
+            state = json.loads(Path(path).read_text())
+            if not isinstance(state, dict):
+                raise ValueError(f"not a JSON object: {type(state).__name__}")
+        except (json.JSONDecodeError, UnicodeDecodeError, ValueError) as e:
+            self._quarantine_checkpoint(path, str(e))
+            return None
+        if state.get("version") != CHECKPOINT_VERSION:
+            self._quarantine_checkpoint(
+                path, f"unsupported schema version {state.get('version')!r}"
+            )
+            return None
         if state.get("config") != self._fingerprint():
             raise ValueError(
                 f"checkpoint {path} was written by a different closed-loop "
@@ -389,45 +563,127 @@ class HeroSearchRun:
         return state
 
     def _save_checkpoint(
-        self,
-        joint: ParetoFrontier,
-        scene_frontiers: Dict[str, ParetoFrontier],
-        cells: List[CellResult],
-        completed: List[str],
-        policies_evaluated: int,
-        search_seconds: float,
-        seconds_to_fixed_bit: Optional[float],
-    ) -> None:
+        self, outputs: Dict[str, CellOutput], order: List[str],
+    ) -> Optional[str]:
+        """Atomically persist the completed cell outputs (+ the scene
+        constants needed to merge them). Returns the path written, or
+        None when checkpointing is disabled."""
         path = self.cfg.checkpoint_path
         if not path:
-            return
+            return None
+        scenes_with_output = {o.scene for o in outputs.values()}
         state = {
+            "version": CHECKPOINT_VERSION,
             "config": self._fingerprint(),
-            "completed": completed,
-            "joint_frontier": joint.to_json(),
-            "scene_frontiers": {
-                s: f.to_json() for s, f in scene_frontiers.items()
+            "completed": list(order),
+            "scene_meta": {
+                s: m.to_json() for s, m in self._scene_meta.items()
+                if s in scenes_with_output
             },
-            "cells": [c.to_json() for c in cells],
-            "policies_evaluated": policies_evaluated,
-            "search_seconds": search_seconds,
-            "seconds_to_fixed_bit": seconds_to_fixed_bit,
+            "cell_outputs": {c: o.to_json() for c, o in outputs.items()},
         }
         tmp = f"{path}.tmp"
         Path(tmp).parent.mkdir(parents=True, exist_ok=True)
         Path(tmp).write_text(json.dumps(state, indent=2))
         os.replace(tmp, path)  # atomic on POSIX: no torn checkpoints
+        return path
+
+    def _restore(
+        self, state: Optional[Dict],
+    ) -> Tuple[Dict[str, CellOutput], List[str]]:
+        """Checkpoint state -> (completed cell outputs, completion order)."""
+        if state is None:
+            return {}, []
+        for s, m in state.get("scene_meta", {}).items():
+            self._scene_meta.setdefault(s, SceneMeta.from_json(m))
+        outputs = {
+            c: CellOutput.from_json(o)
+            for c, o in state["cell_outputs"].items()
+        }
+        order = [c for c in state["completed"] if c in outputs]
+        return outputs, order
 
     # ------------------------------------------------------------------
-    def run(self, stop_after_cells: Optional[int] = None) -> ClosedLoopResult:
-        """Execute (or resume) the closed loop. `stop_after_cells` ends the
-        run gracefully after that many NEW cells — a controlled stand-in
-        for interruption (the checkpoint then carries the partial state a
-        later `run()` resumes from; determinism tests rely on this)."""
-        cfg = self.cfg
-        t_start = time.time()
-        new_cells = 0
+    # Cell execution (the leasable unit)
+    # ------------------------------------------------------------------
+    def cell_specs(self) -> List[CellSpec]:
+        """Every cell of the run in CANONICAL order (scene-major, then
+        budget) — the order merges replay in, whatever order cells
+        actually completed in."""
+        return [
+            CellSpec(
+                scene=scene, scene_idx=si, budget_idx=bi,
+                budget_frac=float(frac), seed=self._cell_seed(si, bi),
+            )
+            for si, scene in enumerate(self.cfg.scenes)
+            for bi, frac in enumerate(self.cfg.budget_fracs)
+        ]
 
+    def run_cell(self, spec: CellSpec) -> CellOutput:
+        """Execute ONE cell's population search and package the result as
+        plain data. Deterministic given the spec (per-cell seed, budget as
+        call state, env never mutated), so a retried or re-leased cell
+        reproduces the original output exactly."""
+        cfg = self.cfg
+        bundle = self.bundle(spec.scene)
+        target = bundle.baseline_latency * float(spec.budget_frac)
+        res = hero_population_search(
+            bundle.benv,
+            PopulationSearchConfig(
+                n_iterations=cfg.n_iterations,
+                population=cfg.population,
+                agent_fraction=cfg.agent_fraction,
+                seed=spec.seed,
+                verbose=False,
+            ),
+            DDPGConfig(
+                seed=spec.seed,
+                warmup_episodes=max(1, cfg.n_iterations // 4),
+                updates_per_episode=8,
+            ),
+            latency_target=target,
+        )
+        points: List[Dict] = []
+        cell_seconds = 0.0  # evaluation time up to the current iteration
+        for h in res.history:
+            ev = h.eval
+            cell_seconds += ev.wall_seconds
+            for j in range(ev.k):
+                points.append({
+                    "latency": float(ev.latency_cycles[j]),
+                    "psnr": float(ev.psnr[j]),
+                    "model_bytes": float(ev.model_bytes[j]),
+                    "bits": [int(b) for b in ev.bits[j]],
+                    "reward": float(ev.reward[j]),
+                    # Evaluation seconds charged before this policy
+                    # existed (proposal overhead between iterations is
+                    # not attributed, a slight undercount) — the
+                    # time-to-fixed-bit base.
+                    "t_emit": cell_seconds,
+                })
+        return CellOutput(
+            cell=spec.name,
+            scene=spec.scene,
+            budget_frac=float(spec.budget_frac),
+            latency_target=target,
+            seed=spec.seed,
+            best_reward=res.best_reward,
+            best_bits=list(res.best_bits),
+            policies_evaluated=res.policies_evaluated,
+            wall_seconds=res.wall_seconds,
+            sharded=bool(bundle.benv.sharded),
+            points=points,
+        )
+
+    # ------------------------------------------------------------------
+    # Merging: canonical-order replay of completed cell outputs
+    # ------------------------------------------------------------------
+    def _replay(self, outputs: Dict[str, CellOutput]):
+        """Merge the completed cells in canonical order. Because every
+        merge runs here — never incrementally against orchestration
+        order — the frontier, per-cell admission counts, and the
+        time-to-fixed-bit clock are identical no matter which workers
+        finished which cells when."""
         # Joint frontier lives in normalized space and only admits points
         # inside the hypervolume reference box: no slower/larger than the
         # 8-bit baseline, no more than 5 dB below it (1-bit garbage
@@ -439,156 +695,83 @@ class HeroSearchRun:
         ))
         scene_frontiers: Dict[str, ParetoFrontier] = {}
         cells: List[CellResult] = []
-        completed: List[str] = []
         policies_evaluated = 0
         search_seconds = 0.0
         seconds_to_fixed_bit: Optional[float] = None
 
-        state = self._load_checkpoint()
-        if state is not None:
-            joint = ParetoFrontier.from_json(state["joint_frontier"])
-            scene_frontiers = {
-                s: ParetoFrontier.from_json(f)
-                for s, f in state["scene_frontiers"].items()
-            }
-            cells = [CellResult.from_json(c) for c in state["cells"]]
-            completed = list(state["completed"])
-            policies_evaluated = int(state["policies_evaluated"])
-            search_seconds = float(state["search_seconds"])
-            seconds_to_fixed_bit = state["seconds_to_fixed_bit"]
-            if cfg.verbose:
-                print(f"[closed-loop] resumed {len(completed)} completed "
-                      f"cell(s) from {cfg.checkpoint_path}", flush=True)
-        resumed = len(completed)
-        executed_sharded: List[bool] = []  # one entry per scene that ran
-
-        for si, scene in enumerate(cfg.scenes):
-            pending = [
-                (bi, frac)
-                for bi, frac in enumerate(cfg.budget_fracs)
-                if _cell_name(scene, frac) not in completed
-            ]
-            if not pending:
-                continue  # fully checkpointed scene: skip even the build
-            bundle = self.bundle(scene)
-            executed_sharded.append(bundle.benv.sharded)
-            raw = scene_frontiers.setdefault(scene, ParetoFrontier())
-
-            # 8-bit anchor: guarantees a non-empty frontier in which no
-            # point is dominated by the fixed-8-bit configuration ("every
-            # point dominates or matches" in the frontier sense). Guarded
-            # against re-insertion on a mid-scene resume: an identical
-            # surviving anchor would TIE with itself and duplicate.
-            base = bundle.baseline_point()
-            _insert_unless_present(raw, base)
-            _insert_unless_present(joint, bundle.normalize(base))
-
+        for spec in self.cell_specs():
+            out = outputs.get(spec.name)
+            if out is None:
+                continue
+            meta = self._scene_meta[spec.scene]
+            raw = scene_frontiers.get(spec.scene)
+            if raw is None:
+                raw = scene_frontiers.setdefault(spec.scene, ParetoFrontier())
+                # 8-bit anchor: guarantees a non-empty frontier in which
+                # no point is dominated by the fixed-8-bit configuration.
+                # Deduped insertion keeps a resumed anchor from tying
+                # with itself and duplicating.
+                base = meta.baseline_point()
+                _insert_unless_present(raw, base)
+                _insert_unless_present(joint, meta.normalize(base))
             # CAQ-style uniform fixed-bit competitor for time-to-baseline.
-            fixed = self._fixed_bit_point(bundle)
+            fixed = meta.fixed_point()
 
-            for bi, frac in pending:
-                cell = _cell_name(scene, frac)
-                target = bundle.baseline_latency * float(frac)
-                seed = self._cell_seed(si, bi)
-                if cfg.verbose:
-                    print(f"[closed-loop] cell {cell}: target="
-                          f"{target:.3e} cycles, seed={seed}", flush=True)
-
-                res = hero_population_search(
-                    bundle.benv,
-                    PopulationSearchConfig(
-                        n_iterations=cfg.n_iterations,
-                        population=cfg.population,
-                        agent_fraction=cfg.agent_fraction,
-                        seed=seed,
-                        verbose=False,
-                    ),
-                    DDPGConfig(
-                        seed=seed,
-                        warmup_episodes=max(1, cfg.n_iterations // 4),
-                        updates_per_episode=8,
-                    ),
-                    latency_target=target,
+            admitted = 0
+            for pt in out.points:
+                p = ParetoPoint(
+                    latency=float(pt["latency"]),
+                    psnr=float(pt["psnr"]),
+                    model_bytes=float(pt["model_bytes"]),
+                    bits=tuple(int(b) for b in pt["bits"]),
+                    scene=spec.scene,
+                    budget=float(spec.budget_frac),
+                    reward=float(pt["reward"]),
                 )
-
-                admitted = 0
-                cell_seconds = 0.0  # evaluation time up to the current iter
-                for h in res.history:
-                    ev = h.eval
-                    cell_seconds += ev.wall_seconds
-                    for j in range(ev.k):
-                        p = ParetoPoint(
-                            latency=float(ev.latency_cycles[j]),
-                            psnr=float(ev.psnr[j]),
-                            model_bytes=float(ev.model_bytes[j]),
-                            bits=tuple(int(b) for b in ev.bits[j]),
-                            scene=scene,
-                            budget=float(frac),
-                            reward=float(ev.reward[j]),
-                        )
-                        # Identity-deduped insertion: CEM resampling and
-                        # budget enforcement routinely re-emit the same
-                        # bit vector, and exact ties would otherwise pile
-                        # up on the frontier.
-                        if _insert_unless_present(raw, p):
-                            admitted += 1
-                        _insert_unless_present(joint, bundle.normalize(p))
-                        if (
-                            seconds_to_fixed_bit is None
-                            and p.dominates_or_ties(fixed)
-                        ):
-                            # Charge only the iterations that ran before
-                            # this policy existed (evaluation time; the
-                            # proposal overhead between iterations is not
-                            # attributed, a slight undercount).
-                            seconds_to_fixed_bit = (
-                                search_seconds + cell_seconds
-                            )
-
-                policies_evaluated += res.policies_evaluated
-                search_seconds += res.wall_seconds
-                cells.append(CellResult(
-                    scene=scene,
-                    budget_frac=float(frac),
-                    latency_target=target,
-                    best_reward=res.best_reward,
-                    best_bits=list(res.best_bits),
-                    policies_evaluated=res.policies_evaluated,
-                    admitted_to_frontier=admitted,
-                    search_seconds=res.wall_seconds,
-                ))
-                completed.append(cell)
-                self._save_checkpoint(
-                    joint, scene_frontiers, cells, completed,
-                    policies_evaluated, search_seconds, seconds_to_fixed_bit,
-                )
-                if cfg.verbose:
-                    print(
-                        f"[closed-loop]   {cell}: {res.policies_evaluated} "
-                        f"policies, {admitted} admitted, frontier="
-                        f"{len(raw)} raw / {len(joint)} joint "
-                        f"({res.wall_seconds:.1f}s)",
-                        flush=True,
-                    )
-                new_cells += 1
-                if stop_after_cells is not None and new_cells >= stop_after_cells:
-                    return self._result(
-                        joint, scene_frontiers, cells, policies_evaluated,
-                        search_seconds, t_start, resumed,
-                        seconds_to_fixed_bit, executed_sharded,
+                # Identity-deduped insertion: CEM resampling and budget
+                # enforcement routinely re-emit the same bit vector, and
+                # exact ties would otherwise pile up on the frontier.
+                if _insert_unless_present(raw, p):
+                    admitted += 1
+                _insert_unless_present(joint, meta.normalize(p))
+                if (
+                    seconds_to_fixed_bit is None
+                    and p.dominates_or_ties(fixed)
+                ):
+                    seconds_to_fixed_bit = (
+                        search_seconds + float(pt["t_emit"])
                     )
 
-        return self._result(
-            joint, scene_frontiers, cells, policies_evaluated,
-            search_seconds, t_start, resumed, seconds_to_fixed_bit,
-            executed_sharded,
-        )
+            policies_evaluated += out.policies_evaluated
+            search_seconds += out.wall_seconds
+            cells.append(CellResult(
+                scene=spec.scene,
+                budget_frac=float(spec.budget_frac),
+                latency_target=out.latency_target,
+                best_reward=out.best_reward,
+                best_bits=list(out.best_bits),
+                policies_evaluated=out.policies_evaluated,
+                admitted_to_frontier=admitted,
+                search_seconds=out.wall_seconds,
+            ))
 
-    def _result(
-        self, joint, scene_frontiers, cells, policies_evaluated,
-        search_seconds, t_start, resumed, seconds_to_fixed_bit,
-        executed_sharded,
+        return (joint, scene_frontiers, cells, policies_evaluated,
+                search_seconds, seconds_to_fixed_bit)
+
+    def finalize(
+        self,
+        outputs: Dict[str, CellOutput],
+        resumed_cells: int,
+        t_start: float,
+        fresh: Sequence[str] = (),
     ) -> ClosedLoopResult:
+        """Canonical-order replay of `outputs` -> `ClosedLoopResult`.
+        `fresh` names the cells EXECUTED this run (vs restored): the
+        result's `sharded` flag describes only evaluators that actually
+        ran, None when everything was resumed."""
+        (joint, scene_frontiers, cells, policies_evaluated, search_seconds,
+         seconds_to_fixed_bit) = self._replay(outputs)
+        executed = [outputs[c].sharded for c in fresh if c in outputs]
         return ClosedLoopResult(
             frontier=joint,
             scene_frontiers=scene_frontiers,
@@ -596,11 +779,54 @@ class HeroSearchRun:
             policies_evaluated=policies_evaluated,
             search_seconds=search_seconds,
             wall_seconds=time.time() - t_start,
-            resumed_cells=resumed,
+            resumed_cells=resumed_cells,
             seconds_to_fixed_bit=seconds_to_fixed_bit,
             fixed_bit_reference=self.FIXED_BIT_REFERENCE,
-            sharded=all(executed_sharded) if executed_sharded else None,
+            sharded=all(executed) if executed else None,
         )
+
+    # ------------------------------------------------------------------
+    def run(self, stop_after_cells: Optional[int] = None) -> ClosedLoopResult:
+        """Execute (or resume) the closed loop sequentially: lease cells
+        to this process in canonical order, checkpoint after each, replay
+        to the final result. `stop_after_cells` ends the run gracefully
+        after that many NEW cells — a controlled stand-in for interruption
+        (the checkpoint then carries the partial state a later `run()`
+        resumes from; determinism tests rely on this). For a worker pool
+        over the same cells, see `repro.distributed.orchestrator`."""
+        cfg = self.cfg
+        t_start = time.time()
+        outputs, order = self._restore(self._load_checkpoint())
+        resumed = len(outputs)
+        if resumed and cfg.verbose:
+            print(f"[closed-loop] resumed {resumed} completed cell(s) "
+                  f"from {cfg.checkpoint_path}", flush=True)
+
+        fresh: List[str] = []
+        for spec in self.cell_specs():
+            if spec.name in outputs:
+                continue
+            if stop_after_cells is not None and len(fresh) >= stop_after_cells:
+                break
+            self.bundle(spec.scene)  # build (or reuse) outside the cell
+            if cfg.verbose:
+                print(f"[closed-loop] cell {spec.name}: budget="
+                      f"{spec.budget_frac:g}, seed={spec.seed}", flush=True)
+            out = self.run_cell(spec)
+            outputs[spec.name] = out
+            order.append(spec.name)
+            fresh.append(spec.name)
+            self._save_checkpoint(outputs, order)
+            if cfg.verbose:
+                print(
+                    f"[closed-loop]   {spec.name}: "
+                    f"{out.policies_evaluated} policies, "
+                    f"{len(out.points)} points "
+                    f"({out.wall_seconds:.1f}s)",
+                    flush=True,
+                )
+
+        return self.finalize(outputs, resumed, t_start, fresh=fresh)
 
     # ------------------------------------------------------------------
     def _fixed_bit_point(self, bundle: SceneBundle) -> ParetoPoint:
@@ -616,6 +842,24 @@ class HeroSearchRun:
             bits=tuple([b] * bundle.env.n_units),
             scene=bundle.scene,
         )
+
+
+# ---------------------------------------------------------------------------
+# Config round-trip (subprocess workers rebuild the run from JSON)
+# ---------------------------------------------------------------------------
+def config_to_json(cfg: ClosedLoopConfig) -> Dict:
+    d = dataclasses.asdict(cfg)
+    d["scenes"] = list(cfg.scenes)
+    d["budget_fracs"] = [float(f) for f in cfg.budget_fracs]
+    return d
+
+
+def config_from_json(d: Dict) -> ClosedLoopConfig:
+    d = dict(d)
+    d["scenes"] = tuple(d["scenes"])
+    d["budget_fracs"] = tuple(float(f) for f in d["budget_fracs"])
+    d["scale"] = SceneScale(**d["scale"])
+    return ClosedLoopConfig(**d)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,10 @@
 """Distribution substrate: sharding rules, sharded population evaluation,
-HLO/roofline analysis, fault tolerance, gradient compression."""
+HLO/roofline analysis, fault tolerance, gradient compression, and the
+elastic cell-parallel search orchestrator.
+
+`orchestrator`/`chaos`/`worker_main` are imported by path (they depend
+on `repro.core.closed_loop`, which imports this package — an eager
+re-export here would be circular)."""
 from repro.distributed.sharding import (
     ShardingConfig,
     param_pspecs,

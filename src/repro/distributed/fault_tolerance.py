@@ -62,34 +62,67 @@ def plan_rescale(
 
 
 class StepWatchdog:
-    """Flags slow steps against a rolling-median SLO (straggler signal)."""
+    """Flags slow steps against a rolling-median SLO (straggler signal).
+
+    Two entry styles share one rolling window:
+
+    * `start()` / `stop(step)` — the original wrap-a-step API, measuring
+      with the injected `clock` (default `time.monotonic`).
+    * `record(dt)` / `is_slow(dt)` — duration-based, for callers that
+      already own the timing (the cell orchestrator measures a worker
+      lease with ITS injected clock and asks the watchdog for the
+      verdict; `is_slow` never mutates the window, so an in-flight hang
+      can be probed repeatedly).
+
+    No verdict is issued before `min_samples` completed durations exist —
+    a cold median would flag the first real step against noise. The SLO
+    boundary is strict: `dt == slo_factor * median` is NOT slow.
+    """
 
     def __init__(self, slo_factor: float = 2.0, window: int = 32,
-                 on_slow: Optional[Callable[[int, float, float], None]] = None):
+                 on_slow: Optional[Callable[[int, float, float], None]] = None,
+                 min_samples: int = 5,
+                 clock: Callable[[], float] = time.monotonic):
         self.slo_factor = slo_factor
         self.window = window
         self.on_slow = on_slow
+        self.min_samples = min_samples
+        self.clock = clock
         self._durations: list = []
         self._t0: Optional[float] = None
         self.slow_steps: list = []
 
+    def median(self) -> Optional[float]:
+        """Rolling median of recorded durations; None before min_samples."""
+        if len(self._durations) < self.min_samples:
+            return None
+        return sorted(self._durations)[len(self._durations) // 2]
+
+    def is_slow(self, dt: float) -> bool:
+        """Would a step of duration `dt` violate the SLO? Pure query —
+        records nothing, so it can probe a still-running step."""
+        med = self.median()
+        return med is not None and dt > self.slo_factor * med
+
+    def record(self, dt: float) -> None:
+        """Add a completed duration to the rolling window."""
+        self._durations.append(float(dt))
+        if len(self._durations) > self.window:
+            self._durations.pop(0)
+
     def start(self):
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
     def stop(self, step: int) -> bool:
         """Returns True if this step violated the SLO."""
         assert self._t0 is not None, "start() not called"
-        dt = time.monotonic() - self._t0
+        dt = self.clock() - self._t0
         self._t0 = None
-        slow = False
-        if len(self._durations) >= 5:
-            med = sorted(self._durations)[len(self._durations) // 2]
-            if dt > self.slo_factor * med:
-                slow = True
-                self.slow_steps.append(step)
-                if self.on_slow:
-                    self.on_slow(step, dt, med)
-        self._durations.append(dt)
-        if len(self._durations) > self.window:
-            self._durations.pop(0)
+        slow = self.is_slow(dt)
+        if slow:
+            self.slow_steps.append(step)
+            if self.on_slow:
+                med = self.median()
+                self.on_slow(step, dt, med)
+        self.record(dt)
         return slow

@@ -53,6 +53,9 @@ __all__ = [
     "ServeEngine",
     "EngineConfig",
     "serve_engine",
+    "AdmissionFull",
+    "RequestExpired",
+    "ArtifactLoadError",
 ]
 
 _LAZY = {
@@ -68,6 +71,9 @@ _LAZY = {
     "ServeEngine": ("repro.hero.engine", "ServeEngine"),
     "EngineConfig": ("repro.hero.scheduler", "EngineConfig"),
     "serve_engine": ("repro.hero.engine", "serve_engine"),
+    "AdmissionFull": ("repro.hero.scheduler", "AdmissionFull"),
+    "RequestExpired": ("repro.hero.scheduler", "RequestExpired"),
+    "ArtifactLoadError": ("repro.hero.scheduler", "ArtifactLoadError"),
 }
 
 

@@ -57,6 +57,18 @@ def search_main(argv=None) -> int:
                          "default: a per-config file under experiments/, so "
                          "changing flags starts fresh instead of clashing "
                          "with an old checkpoint)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="cell-parallel worker pool size (>1 routes the "
+                         "sweep through the elastic orchestrator; results "
+                         "are identical to the sequential run)")
+    ap.add_argument("--worker-kind", default="thread",
+                    choices=("thread", "inline", "subprocess"),
+                    help="worker isolation: threads share the process "
+                         "(default), subprocess survives segfaulting cells")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="fault-injection drill: seed a FaultPlan over the "
+                         "sweep's cells (worker kills / transient errors) "
+                         "and prove the recovery paths on this very config")
     args = ap.parse_args(argv)
 
     scenes = tuple(s for s in args.scenes.split(",") if s)
@@ -93,7 +105,16 @@ def search_main(argv=None) -> int:
     if cfg.checkpoint_path:
         Path(cfg.checkpoint_path).parent.mkdir(parents=True, exist_ok=True)
     try:
-        result = HeroSearchRun(cfg).run()
+        run = HeroSearchRun(cfg)
+        if args.workers > 1 or args.chaos is not None:
+            from repro.distributed.orchestrator import run_orchestrated
+
+            result = run_orchestrated(
+                run, workers=args.workers, worker_kind=args.worker_kind,
+                chaos_seed=args.chaos, verbose=True,
+            )
+        else:
+            result = run.run()
     except ValueError as e:
         if "closed-loop config" not in str(e):
             raise

@@ -45,8 +45,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.hero.scheduler import (
+    AdmissionFull,
+    ArtifactLoadError,
     CompletedRecord,
     EngineConfig,
+    RequestExpired,
     RequestState,
     Scheduler,
     WorkItem,
@@ -89,6 +92,7 @@ class ArtifactCache:
         self.evictions = 0
         self.hits = 0
         self.overflows = 0
+        self.load_failures = 0
 
     # ------------------------------------------------------------------
     @property
@@ -121,10 +125,21 @@ class ArtifactCache:
                 f"scene {scene!r} is not resident and the engine has no "
                 "artifact loader"
             )
-        artifact = self._loader(scene)
-        if artifact is None:
-            raise KeyError(f"artifact loader returned None for {scene!r}")
-        nbytes = int(self._size_fn(artifact))
+        # Exception safety: nothing below mutates cache state until BOTH
+        # the loader and the size function have succeeded — a raising
+        # loader leaves no partial entry, no skewed resident_bytes()/LRU,
+        # and only the load_failures counter moves.
+        try:
+            artifact = self._loader(scene)
+            if artifact is None:
+                raise KeyError(f"artifact loader returned None for {scene!r}")
+            nbytes = int(self._size_fn(artifact))
+        except Exception as e:
+            self.load_failures += 1
+            self._event(("load_failed", scene, repr(e)))
+            raise ArtifactLoadError(
+                f"loading artifact for scene {scene!r} failed: {e!r}"
+            ) from e
         self._evict_for(nbytes)
         e = CacheEntry(scene, artifact, nbytes)
         self._entries[scene] = e
@@ -150,6 +165,7 @@ class ArtifactCache:
 
     def reset_stats(self) -> None:
         self.loads = self.evictions = self.hits = self.overflows = 0
+        self.load_failures = 0
 
 
 # ---------------------------------------------------------------------------
@@ -283,8 +299,12 @@ class ServeEngine:
         self._steps = 0
         self._items_rendered = 0
         self._rays_rendered = 0
+        self._items_dropped = 0
+        self._rays_dropped = 0
         self._requests_submitted = 0
         self._requests_completed = 0
+        self._requests_expired = 0
+        self._rejected = 0
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
 
@@ -347,10 +367,18 @@ class ServeEngine:
         return self._stepper.retraces if self._stepper is not None else 0
 
     # ------------------------------------------------------------------
-    def submit(self, rays_o, rays_d, scene: Optional[str] = None) -> int:
+    def submit(self, rays_o, rays_d, scene: Optional[str] = None,
+               deadline: Optional[float] = None) -> int:
         """Enqueue one render request ((N, 3) rays) for `scene`; returns a
         request id. `scene=None` resolves only when exactly one scene is
-        resident (the single-artifact facade case)."""
+        resident (the single-artifact facade case).
+
+        `deadline` (engine-clock timestamp) makes the request droppable:
+        queued items whose deadline has passed are discarded at bucket-
+        take time and `result()` raises `RequestExpired`. With
+        `cfg.max_pending` set, a submit that would push the queued-item
+        count past the cap raises `AdmissionFull` (counted in the
+        `requests_rejected` stat) without enqueuing anything."""
         ro = np.asarray(rays_o, np.float32).reshape(-1, 3)
         rd = np.asarray(rays_d, np.float32).reshape(-1, 3)
         assert ro.shape == rd.shape, (ro.shape, rd.shape)
@@ -367,16 +395,28 @@ class ServeEngine:
                 f"scene {scene!r} is not resident and no loader is "
                 "configured — the request could never be served"
             )
-        rid = self._next_rid
-        self._next_rid += 1
-        now = self._clock()
         R = self.cfg.slot_rays
         n_rays = ro.shape[0]
         n_items = max(1, -(-n_rays // R))
+        if (
+            self.cfg.max_pending is not None
+            and self._sched.pending() + n_items > self.cfg.max_pending
+        ):
+            self._rejected += 1
+            self._event(("reject", scene, n_items))
+            raise AdmissionFull(
+                f"admission rejected: {self._sched.pending()} item(s) "
+                f"queued + {n_items} requested > max_pending="
+                f"{self.cfg.max_pending}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        now = self._clock()
         self._requests[rid] = RequestState(
             rid=rid, scene=scene, n_rays=n_rays, n_items=n_items,
             colors=np.zeros((n_rays, 3), np.float32),
             done=np.zeros((n_rays,), bool), t_submit=now,
+            deadline=deadline,
         )
         self._requests_submitted += 1
         if self._t_first_submit is None:
@@ -393,15 +433,62 @@ class ServeEngine:
         return rid
 
     # ------------------------------------------------------------------
+    def _item_expired(self, it: WorkItem, now: float) -> bool:
+        req = self._requests.get(it.rid)
+        if req is None:
+            # Expired request already freed by result(); its stragglers
+            # drain as drops.
+            return True
+        return req.expired or (
+            req.deadline is not None and now >= req.deadline
+        )
+
+    def _drop_item(self, it: WorkItem, now: float) -> None:
+        self._items_dropped += 1
+        self._rays_dropped += it.stop - it.start
+        self._event(("drop", it.rid, it.seq))
+        req = self._requests.get(it.rid)
+        if req is None:
+            return
+        req.items_dropped += 1
+        if not req.expired:
+            req.expired = True
+            self._requests_expired += 1
+            self._event(("expire", it.rid))
+
     def step(self) -> int:
         """Admit + render ONE single-scene bucket (up to `slots` items) in
-        one device call. Returns items completed (0 = idle)."""
-        scene = self._sched.oldest_scene()
-        if scene is None:
-            return 0
-        entry = self._cache.ensure(scene)  # load-on-miss + LRU eviction
-        scene2, items = self._sched.take_bucket()
-        assert scene2 == scene and items, (scene2, scene)
+        one device call, dropping past-deadline items at take time. Loops
+        internally past fully-expired buckets, so 0 means IDLE — `drain()`
+        never stops early on a run of expired work. Returns items removed
+        from the queues (rendered + dropped)."""
+        dropped_total = 0
+        while True:
+            scene = self._sched.oldest_scene()
+            if scene is None:
+                return dropped_total
+            scene2, items = self._sched.take_bucket()
+            assert scene2 == scene and items, (scene2, scene)
+            now = self._clock()
+            live = []
+            for it in items:
+                if self._item_expired(it, now):
+                    self._drop_item(it, now)
+                    dropped_total += 1
+                else:
+                    live.append(it)
+            if not live:
+                continue  # whole bucket past deadline: no device call
+            try:
+                # Load-on-miss + LRU eviction; runs AFTER the take, so a
+                # failing loader re-queues the live items untouched (the
+                # cache itself mutates nothing on failure).
+                entry = self._cache.ensure(scene)
+            except Exception:
+                self._sched.requeue_front(live)
+                raise
+            items = live
+            break
 
         S, R = self.cfg.slots, self.cfg.slot_rays
         # Padding rays (empty slots / short items) originate far outside
@@ -440,7 +527,7 @@ class ServeEngine:
                     t_submit=req.t_submit, t_done=now,
                 ))
                 self._event(("complete", it.rid))
-        return len(items)
+        return dropped_total + len(items)
 
     def drain(self) -> None:
         """Process every queue until the engine is idle."""
@@ -454,8 +541,15 @@ class ServeEngine:
         """Completed-but-not-yet-polled spans of a live request, as
         [(start, stop, colors-copy)] — the streaming seam: work items
         surface here as soon as their device step lands, before the full
-        request drains. Spans already polled are not repeated."""
+        request drains. Spans already polled are not repeated. An expired
+        request raises `RequestExpired` (terminal for streamers;
+        `result()` frees it)."""
         req = self._live(rid)
+        if req.expired:
+            raise RequestExpired(
+                f"request {rid} expired past its deadline "
+                f"({req.items_dropped}/{req.n_items} items dropped)"
+            )
         spans, req.fresh_spans = req.fresh_spans, []
         return [(s, e, req.colors[s:e].copy()) for (s, e) in spans]
 
@@ -468,8 +562,15 @@ class ServeEngine:
     def result(self, rid: int) -> np.ndarray:
         """(N, 3) colors of a completed request. RETRIEVAL FREES the
         request (the `_requests`-leak fix): a second call raises KeyError;
-        stats survive in the bounded completed ring."""
+        stats survive in the bounded completed ring. An expired request
+        raises `RequestExpired` AND frees — no complete result exists."""
         req = self._live(rid)
+        if req.expired:
+            del self._requests[rid]
+            raise RequestExpired(
+                f"request {rid} expired past its deadline "
+                f"({req.items_dropped}/{req.n_items} items dropped)"
+            )
         if req.t_done is None:
             raise ValueError(f"request {rid} is not complete "
                              f"({req.items_done}/{req.n_items} items)")
@@ -509,14 +610,19 @@ class ServeEngine:
         Conservation (`submitted == completed + pending`) is preserved by
         re-basing the submitted counters on what is still in flight."""
         live_incomplete = [
-            r for r in self._requests.values() if r.t_done is None
+            r for r in self._requests.values()
+            if r.t_done is None and not r.expired
         ]
         self._requests_submitted = len(live_incomplete)
         self._requests_completed = 0
+        self._requests_expired = 0
+        self._rejected = 0
         self._sched.items_submitted = self._sched.pending()
         self._sched.rays_submitted = self._sched.pending_rays()
         self._items_rendered = 0
         self._rays_rendered = 0
+        self._items_dropped = 0
+        self._rays_dropped = 0
         self._steps = 0
         self._ring.clear()
         self._t_first_submit = None
@@ -546,13 +652,19 @@ class ServeEngine:
         return {
             "requests_submitted": self._requests_submitted,
             "requests_completed": done,
-            "requests_pending": self._requests_submitted - done,
+            "requests_expired": self._requests_expired,
+            "requests_pending": (
+                self._requests_submitted - done - self._requests_expired
+            ),
+            "requests_rejected": self._rejected,
             "items_submitted": self._sched.items_submitted,
             "items_rendered": self._items_rendered,
             "items_pending": pending_items,
+            "items_dropped": self._items_dropped,
             "rays_submitted": self._sched.rays_submitted,
             "rays_rendered": self._rays_rendered,
             "rays_pending": self._sched.pending_rays(),
+            "rays_dropped": self._rays_dropped,
             "device_steps": self._steps,
             "wall_seconds": round(wall, 6),
             "requests_per_sec": round(done / wall, 4) if wall > 0 else None,
@@ -577,6 +689,7 @@ class ServeEngine:
                 "evictions": self._cache.evictions,
                 "hits": self._cache.hits,
                 "overflows": self._cache.overflows,
+                "load_failures": self._cache.load_failures,
             },
             "slots": self.cfg.slots,
             "slot_rays": self.cfg.slot_rays,

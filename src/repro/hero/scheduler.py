@@ -32,6 +32,22 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 import numpy as np
 
 
+class AdmissionFull(RuntimeError):
+    """`submit()` rejected: the engine's pending-item queue is at
+    `max_pending` — the backpressure signal a front-end turns into 429/
+    shed-load instead of letting the queue grow without bound."""
+
+
+class RequestExpired(RuntimeError):
+    """The request's deadline passed before all its items rendered; its
+    queued items were dropped and no complete result exists."""
+
+
+class ArtifactLoadError(RuntimeError):
+    """The artifact loader (or size function) raised during a cache miss;
+    the cache state is unchanged (no partial entry, no skewed stats)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Static shape + policy knobs of the serve engine."""
@@ -55,8 +71,13 @@ class EngineConfig:
     # percentiles are computed over this bounded ring.
     completed_ring: int = 1024
     # >0: record the last N scheduler/cache events ("submit"/"bucket"/
-    # "load"/"evict"/"complete" tuples) for test-harness trace assertions.
+    # "load"/"evict"/"complete"/"drop"/"expire" tuples) for test-harness
+    # trace assertions.
     trace_events: int = 0
+    # Bounded admission: max queued work items across all scenes; a
+    # submit() that would exceed it raises AdmissionFull (and counts in
+    # the `rejected` stat). None = unbounded (the historical behavior).
+    max_pending: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -87,6 +108,11 @@ class RequestState:
     items_done: int = 0
     t_submit: float = 0.0
     t_done: Optional[float] = None
+    # Per-request deadline (engine clock domain); queued items of a
+    # request whose deadline has passed are dropped at bucket-take time.
+    deadline: Optional[float] = None
+    items_dropped: int = 0
+    expired: bool = False
     # Completed (start, stop) spans not yet surfaced through `poll()` —
     # the streaming seam: partial frames are observable before the
     # request drains.
@@ -125,6 +151,14 @@ class Scheduler:
         self._queues.setdefault(item.scene, deque()).append(item)
         self.items_submitted += 1
         self.rays_submitted += item.stop - item.start
+
+    def requeue_front(self, items: List[WorkItem]) -> None:
+        """Return taken-but-unrendered items to the head of their queues
+        in their original order (engine failure recovery: a raising
+        artifact loader must not lose work). Does NOT touch the submitted
+        counters — the items were already counted on push."""
+        for it in reversed(items):
+            self._queues.setdefault(it.scene, deque()).appendleft(it)
 
     # ------------------------------------------------------------------
     def pending(self, scene: Optional[str] = None) -> int:

@@ -47,6 +47,9 @@ class ServeConfig:
     # Completed-request stat records kept after `result()` frees a
     # request (latency percentiles are computed over this ring).
     completed_ring: int = 1024
+    # Bounded admission: max queued work items; submits past the cap
+    # raise `AdmissionFull` (None = unbounded).
+    max_pending: Optional[int] = None
 
     def engine_config(self, **overrides) -> EngineConfig:
         """The equivalent `EngineConfig` (single-scene engines share every
@@ -55,6 +58,7 @@ class ServeConfig:
             slots=self.slots, slot_rays=self.slot_rays, budget=self.budget,
             budget_headroom=self.budget_headroom, use_pallas=self.use_pallas,
             early_stop=self.early_stop, completed_ring=self.completed_ring,
+            max_pending=self.max_pending,
             **overrides,
         )
 
@@ -74,9 +78,13 @@ class RenderService:
         return self._engine
 
     # ------------------------------------------------------------------
-    def submit(self, rays_o, rays_d) -> int:
-        """Enqueue one render request ((N, 3) rays); returns a request id."""
-        return self._engine.submit(rays_o, rays_d, scene=self._scene)
+    def submit(self, rays_o, rays_d, deadline: Optional[float] = None) -> int:
+        """Enqueue one render request ((N, 3) rays); returns a request id.
+        `deadline` (engine-clock timestamp) makes it droppable — see
+        `ServeEngine.submit`."""
+        return self._engine.submit(
+            rays_o, rays_d, scene=self._scene, deadline=deadline
+        )
 
     @property
     def pending(self) -> int:

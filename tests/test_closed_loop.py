@@ -212,6 +212,143 @@ def test_frontier_valid_vs_8bit_baseline(bundles):
 
 
 # ---------------------------------------------------------------------------
+# Orchestrated sweeps: sequential identity, chaos recovery, quarantine
+# ---------------------------------------------------------------------------
+def _assert_results_identical(a, b):
+    """Full result identity: joint + per-scene frontiers (sets AND sizes,
+    to catch silent duplicate ties), exact hypervolume, per-cell winners."""
+    assert a.frontier.objective_set() == b.frontier.objective_set()
+    assert len(a.frontier) == len(b.frontier)
+    assert a.hypervolume() == b.hypervolume()
+    assert set(a.scene_frontiers) == set(b.scene_frontiers)
+    for scene in a.scene_frontiers:
+        assert (
+            a.scene_frontiers[scene].objective_set()
+            == b.scene_frontiers[scene].objective_set()
+        )
+        assert len(a.scene_frontiers[scene]) == len(b.scene_frontiers[scene])
+    assert [c.best_bits for c in a.cells] == [c.best_bits for c in b.cells]
+    assert a.policies_evaluated == b.policies_evaluated
+
+
+def test_orchestrator_workers1_identical_to_sequential(bundles):
+    """The acceptance baseline: one inline worker, chaos off — the
+    orchestrator IS the sequential `HeroSearchRun.run()`, result-for-
+    result (frontier points and exact hypervolume)."""
+    from repro.distributed.orchestrator import (
+        ElasticOrchestrator,
+        OrchestratorConfig,
+        SearchCellProgram,
+    )
+
+    cfg = _cl_cfg()
+    seq = HeroSearchRun(cfg, bundles).run()
+    orch = ElasticOrchestrator(
+        SearchCellProgram(HeroSearchRun(cfg, bundles)),
+        OrchestratorConfig(workers=1, worker_kind="inline"),
+    )
+    res = orch.run()
+    _assert_results_identical(res, seq)
+    assert res.resumed_cells == 0
+    assert [e for e in orch.events if e[0] == "done"] == [
+        ("done", s.name, 0, "inline-0")
+        for s in HeroSearchRun(cfg, bundles).cell_specs()
+    ]
+
+
+def test_orchestrator_thread_pool_identical_to_sequential(bundles):
+    """Two thread workers complete cells out of canonical order; the
+    replay-at-finalize merge still reproduces the sequential result."""
+    from repro.distributed.orchestrator import (
+        ElasticOrchestrator,
+        OrchestratorConfig,
+        SearchCellProgram,
+    )
+
+    cfg = _cl_cfg()
+    seq = HeroSearchRun(cfg, bundles).run()
+    res = ElasticOrchestrator(
+        SearchCellProgram(HeroSearchRun(cfg, bundles)),
+        OrchestratorConfig(workers=2, worker_kind="thread"),
+    ).run()
+    _assert_results_identical(res, seq)
+
+
+def test_chaos_sweep_recovers_to_identical_frontier(bundles, tmp_path):
+    """THE acceptance drill: a 2-scene x 2-budget sweep takes a worker
+    kill on its first cell AND a torn checkpoint write (the orchestrator
+    dies mid-write); the relaunched sweep quarantines the torn file,
+    restarts clean, and lands on the EXACT uninterrupted joint frontier
+    (points and hypervolume pinned)."""
+    from repro.distributed.chaos import ChaosInterrupt, Fault, FaultPlan
+    from repro.distributed.orchestrator import (
+        ElasticOrchestrator,
+        OrchestratorConfig,
+        SearchCellProgram,
+    )
+
+    cfg = _cl_cfg()
+    clean = HeroSearchRun(cfg, bundles).run()
+
+    ck = tmp_path / "sweep.json"
+    cfg_ck = dataclasses.replace(cfg, checkpoint_path=str(ck))
+    names = [s.name for s in HeroSearchRun(cfg_ck, bundles).cell_specs()]
+    plan = FaultPlan([
+        Fault("crash", names[0]),  # worker killed on the first lease
+        Fault("torn_checkpoint", names[2]),  # host killed mid-write later
+    ])
+    orch = ElasticOrchestrator(
+        SearchCellProgram(HeroSearchRun(cfg_ck, bundles)),
+        OrchestratorConfig(
+            workers=2, worker_kind="inline",
+            backoff_base=1e-4, poll_interval=1e-4,
+        ),
+        chaos=plan,
+    )
+    with pytest.raises(ChaosInterrupt):
+        orch.run()
+    ev_kinds = [e[0] for e in orch.events]
+    assert "crash" in ev_kinds and "rescale" in ev_kinds  # kill recovered
+    assert ev_kinds.count("torn") == 1
+    assert ck.exists()
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(ck.read_text())  # the write really was torn
+
+    # Relaunch. The torn file is quarantined (warned, moved aside) and the
+    # sweep restarts clean — NOT from a silently half-trusted checkpoint.
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        resumed = ElasticOrchestrator(
+            SearchCellProgram(HeroSearchRun(cfg_ck, bundles)),
+            OrchestratorConfig(workers=2, worker_kind="inline"),
+        ).run()
+    assert (tmp_path / "sweep.json.corrupt").exists()
+    _assert_results_identical(resumed, clean)
+    # And the checkpoint left behind by the relaunch is whole again.
+    state = json.loads(ck.read_text())
+    assert sorted(state["completed"]) == sorted(names)
+
+
+def test_truncated_checkpoint_quarantined_and_restarted(bundles, tmp_path):
+    """Satellite regression: a truncated checkpoint file is moved to
+    `<path>.corrupt`, a RuntimeWarning names it, and the sequential run
+    restarts cleanly to the full result."""
+    from repro.distributed.chaos import tear_checkpoint
+
+    cfg = _cl_cfg()
+    full = HeroSearchRun(cfg, bundles).run()
+
+    ck = tmp_path / "ckpt.json"
+    cfg_ck = dataclasses.replace(cfg, checkpoint_path=str(ck))
+    HeroSearchRun(cfg_ck, bundles).run(stop_after_cells=2)
+    tear_checkpoint(str(ck))
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        res = HeroSearchRun(cfg_ck, bundles).run()
+    assert res.resumed_cells == 0  # nothing was trusted from the torn file
+    assert (tmp_path / "ckpt.json.corrupt").exists()
+    _assert_results_identical(res, full)
+
+
+# ---------------------------------------------------------------------------
 # Shared occupancy bake (registry)
 # ---------------------------------------------------------------------------
 def test_two_envs_same_scene_share_one_occupancy_grid(bundles):

@@ -557,3 +557,235 @@ def test_property_no_starvation_wait_bounded_by_backlog(seed):
         assert done_step[rid] - step0 <= backlog + n_items, (
             rid, done_step[rid], step0, backlog, n_items,
         )
+
+
+# ---------------------------------------------------------------------------
+# ArtifactCache.ensure() exception safety (raising loader)
+# ---------------------------------------------------------------------------
+def test_raising_loader_leaves_cache_and_queue_intact():
+    """A loader that raises mid-load must not leave a partial CacheEntry,
+    wrong resident_bytes(), or skewed LRU/stats — and the bucket's work
+    items go back to the queue, so a later retry serves them."""
+    from repro.hero.scheduler import ArtifactLoadError
+
+    attempts = []
+
+    def flaky_loader(scene):
+        attempts.append(scene)
+        if len(attempts) < 3:
+            raise OSError(f"storage glitch loading {scene}")
+        return FakeArtifact(scene, 100)
+
+    cfg = EngineConfig(slots=2, slot_rays=4, cache_bytes=250, trace_events=64)
+    eng, _, dev = make_engine(("a",), cfg, loader=flaky_loader)
+    rng = np.random.RandomState(20)
+    roa, rda = rays(rng, 4)
+    rob, rdb = rays(rng, 6)  # 2 items for the missing scene
+    ra = eng.submit(roa, rda, scene="a")
+    rb = eng.submit(rob, rdb, scene="b")
+    eng.step()  # serves resident a
+
+    before = eng.stats()["cache"]
+    for _ in range(2):  # two failing loads of b
+        with pytest.raises(ArtifactLoadError, match="storage glitch"):
+            eng.step()
+    after = eng.stats()
+    # No partial entry, no byte skew, no load/eviction counted.
+    assert eng.resident_scenes == ["a"]
+    assert after["cache"]["resident_bytes"] == before["resident_bytes"] == 100
+    assert after["cache"]["loads"] == before["loads"]
+    assert after["cache"]["evictions"] == 0
+    assert after["cache"]["load_failures"] == 2
+    # The failed bucket's items are back in the queue, order intact.
+    assert after["items_pending"] == 2
+    assert after["items_submitted"] == (
+        after["items_rendered"] + after["items_pending"]
+    )
+
+    eng.drain()  # third attempt succeeds
+    np.testing.assert_array_equal(eng.result(ra), color_fn(roa))
+    np.testing.assert_array_equal(eng.result(rb), color_fn(rob))
+    assert eng.stats()["cache"]["loads"] == before["loads"] + 1
+
+
+# ---------------------------------------------------------------------------
+# Bounded admission (max_pending)
+# ---------------------------------------------------------------------------
+def test_admission_full_rejects_past_cap_and_counts():
+    from repro.hero.scheduler import AdmissionFull
+
+    cfg = EngineConfig(slots=1, slot_rays=4, max_pending=3, trace_events=64)
+    eng, _, _ = make_engine(("a",), cfg)
+    rng = np.random.RandomState(21)
+    ro8, rd8 = rays(rng, 8)  # 2 items
+    ro4, rd4 = rays(rng, 4)  # 1 item
+    r0 = eng.submit(ro8, rd8, scene="a")
+    r1 = eng.submit(ro4, rd4, scene="a")  # queue now at the cap (3)
+    with pytest.raises(AdmissionFull, match="max_pending=3"):
+        eng.submit(ro4, rd4, scene="a")
+    st_ = eng.stats()
+    assert st_["requests_rejected"] == 1
+    assert st_["requests_submitted"] == 2  # the reject enqueued NOTHING
+    assert st_["items_pending"] == 3
+    assert ("reject", "a", 1) in eng.events
+
+    eng.step()  # frees a slot: admission reopens
+    r2 = eng.submit(ro4, rd4, scene="a")
+    eng.drain()
+    for rid, ro in [(r0, ro8), (r1, ro4), (r2, ro4)]:
+        np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+    assert eng.stats()["requests_rejected"] == 1  # sticky until reset
+    eng.reset_stats()
+    assert eng.stats()["requests_rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Per-request deadlines
+# ---------------------------------------------------------------------------
+def test_deadline_drops_at_bucket_take_and_result_raises():
+    """Queued items of a past-deadline request are dropped at bucket-take
+    time (no device compute spent), result() raises RequestExpired and
+    frees, and conservation extends to the dropped items."""
+    from repro.hero.scheduler import RequestExpired
+
+    cfg = EngineConfig(slots=1, slot_rays=4, trace_events=64)
+    eng, clk, dev = make_engine(("a",), cfg)
+    rng = np.random.RandomState(22)
+    ro_d, rd_d = rays(rng, 8)   # 2 items, deadline t=1.0
+    ro_ok, rd_ok = rays(rng, 4)  # 1 item, no deadline
+    rd_rid = eng.submit(ro_d, rd_d, scene="a", deadline=1.0)
+    ok_rid = eng.submit(ro_ok, rd_ok, scene="a")
+
+    eng.step()  # t=0: first deadline item renders fine
+    assert [(s, e) for s, e, _ in eng.poll(rd_rid)] == [(0, 4)]
+    clk.advance(2.0)  # past the deadline while the second item queues
+
+    n = eng.step()  # drops (rd_rid, 1) at take, renders ok_rid's item
+    assert n == 2  # one dropped + one rendered
+    assert len(dev.calls) == 2  # the dropped item never reached a device
+    assert ("drop", rd_rid, 1) in eng.events
+    assert ("expire", rd_rid) in eng.events
+    bucket_items = [e[2] for e in eng.events if e[0] == "bucket"]
+    assert bucket_items == [((rd_rid, 0),), ((ok_rid, 0),)]
+
+    with pytest.raises(RequestExpired, match="expired"):
+        eng.poll(rd_rid)
+    with pytest.raises(RequestExpired, match="1/2 items dropped"):
+        eng.result(rd_rid)
+    with pytest.raises(KeyError):  # freed by the raising result()
+        eng.result(rd_rid)
+    np.testing.assert_array_equal(eng.result(ok_rid), color_fn(ro_ok))
+
+    st_ = eng.stats()
+    assert st_["requests_expired"] == 1
+    assert st_["items_dropped"] == 1 and st_["rays_dropped"] == 4
+    assert st_["items_submitted"] == (
+        st_["items_rendered"] + st_["items_pending"] + st_["items_dropped"]
+    )
+    assert st_["requests_pending"] == 0
+
+
+def test_fully_expired_buckets_do_not_stall_drain():
+    """step() loops past buckets whose every item expired — drain() keeps
+    going and later scenes still serve (0 from step means IDLE)."""
+    cfg = EngineConfig(slots=2, slot_rays=4, trace_events=64)
+    eng, clk, dev = make_engine(("a", "b"), cfg)
+    rng = np.random.RandomState(23)
+    ro_a, rd_a = rays(rng, 8)  # 2 items, will fully expire
+    ro_b, rd_b = rays(rng, 4)
+    ra = eng.submit(ro_a, rd_a, scene="a", deadline=0.5)
+    rb = eng.submit(ro_b, rd_b, scene="b")
+    clk.advance(1.0)  # a's deadline passes before any step
+
+    eng.drain()
+    assert [c[0] for c in dev.calls] == ["b"]  # a never touched a device
+    st_ = eng.stats()
+    assert st_["items_dropped"] == 2 and st_["requests_expired"] == 1
+    assert st_["items_pending"] == 0
+    np.testing.assert_array_equal(eng.result(rb), color_fn(ro_b))
+    from repro.hero.scheduler import RequestExpired
+
+    with pytest.raises(RequestExpired):
+        eng.result(ra)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_property_conservation_with_deadlines(seed):
+    """Conservation under random deadlines: every submitted item is
+    rendered exactly once OR dropped exactly once, never both;
+      items_submitted == items_rendered + items_pending + items_dropped
+      requests_submitted == completed + pending + expired
+    after every operation, and terminal retrieval matches each request's
+    fate."""
+    from repro.hero.scheduler import RequestExpired
+
+    rng = np.random.RandomState(seed)
+    cfg = EngineConfig(slots=2, slot_rays=4, trace_events=100_000)
+    clk = FakeClock()
+    dev = FakeDevice(clk, cost=0.25)
+    eng = ServeEngine(
+        {s: FakeArtifact(s) for s in ("a", "b")}, cfg,
+        clock=clk, device_step=dev,
+    )
+    submitted = {}  # rid -> rays_o
+    rendered, dropped = [], []
+    ev_idx = 0
+
+    def absorb_events():
+        nonlocal ev_idx
+        for ev in eng.events[ev_idx:]:
+            if ev[0] == "bucket":
+                rendered.extend(ev[2])
+            elif ev[0] == "drop":
+                dropped.append((ev[1], ev[2]))
+        ev_idx = len(eng.events)
+        st_ = eng.stats()
+        assert st_["items_submitted"] == (
+            st_["items_rendered"] + st_["items_pending"]
+            + st_["items_dropped"]
+        )
+        assert st_["rays_submitted"] == (
+            st_["rays_rendered"] + st_["rays_pending"] + st_["rays_dropped"]
+        )
+        assert st_["requests_submitted"] == (
+            st_["requests_completed"] + st_["requests_pending"]
+            + st_["requests_expired"]
+        )
+
+    for _ in range(50):
+        if rng.rand() < 0.55:
+            scene = ("a", "b")[int(rng.randint(2))]
+            n = 1 + int(rng.randint(10))
+            ro, rd = rays(rng, n)
+            # ~40% of requests carry a deadline, some already hopeless.
+            ddl = (
+                clk.t + float(rng.uniform(-0.25, 2.0))
+                if rng.rand() < 0.4 else None
+            )
+            rid = eng.submit(ro, rd, scene=scene, deadline=ddl)
+            submitted[rid] = ro
+        else:
+            eng.step()
+            clk.advance(0.125)
+        absorb_events()
+    eng.drain()
+    absorb_events()
+
+    # Exactly-once across BOTH fates, and the fates are disjoint.
+    assert len(rendered) == len(set(rendered))
+    assert len(dropped) == len(set(dropped))
+    assert set(rendered).isdisjoint(set(dropped))
+    expect = {
+        (rid, i)
+        for rid, ro in submitted.items()
+        for i in range(max(1, -(-len(ro) // cfg.slot_rays)))
+    }
+    assert set(rendered) | set(dropped) == expect
+
+    for rid, ro in submitted.items():
+        try:
+            np.testing.assert_array_equal(eng.result(rid), color_fn(ro))
+        except RequestExpired:
+            pass
+    assert len(eng._requests) == 0
