@@ -1,0 +1,85 @@
+"""Regenerate the committed packed-matmul block-size autotune table.
+
+Measures the candidate (bm, bn, bk) grid for a set of representative
+field-query / MLP shapes on THIS runner's kernel backend and writes the
+winners into ``src/repro/kernels/autotune_table.json`` under the backend
+key (`repro.kernels.autotune.backend_key()`). Entries for other backends
+are preserved — the table accumulates one list per backend, like the
+bench baselines accumulate one file per runner.
+
+Run it whenever the kernel, the default shapes, or the runner changes:
+
+  PYTHONPATH=src:. python benchmarks/autotune_quant_matmul.py
+  PYTHONPATH=src:. python benchmarks/autotune_quant_matmul.py \
+      --shapes 6656x16x16 --bits 4,8 --repeats 3
+
+Then commit the table and confirm the never-loses gate:
+  PYTHONPATH=src:. python benchmarks/render_throughput.py --check-autotune
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.kernels import autotune
+
+# Representative (M, K, N): the fused field query at quick scale
+# (B=6656 staged samples, K = n_levels*features = 8, hidden 16), the
+# hidden/color layers, and a standard-scale layer (hidden 32, K=16).
+DEFAULT_SHAPES = (
+    (6656, 8, 16),
+    (6656, 16, 16),
+    (16384, 16, 32),
+    (16384, 32, 32),
+)
+DEFAULT_BITS = (2, 4, 8)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shapes", default=None,
+                    help="comma-separated MxKxN list (default: the "
+                         "representative field-query/MLP shapes)")
+    ap.add_argument("--bits", default=None,
+                    help="comma-separated packed bit widths (default 2,4,8)")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="table path (default: the committed "
+                         "src/repro/kernels/autotune_table.json)")
+    args = ap.parse_args(argv)
+
+    shapes = DEFAULT_SHAPES
+    if args.shapes:
+        shapes = tuple(
+            tuple(int(d) for d in s.split("x")) for s in args.shapes.split(",")
+        )
+    bits_list = DEFAULT_BITS
+    if args.bits:
+        bits_list = tuple(int(b) for b in args.bits.split(","))
+
+    key = autotune.backend_key()
+    table = dict(autotune.load_table(args.out))
+    entries_by_key = dict(table.get("entries", {}))
+    print(f"[autotune] measuring backend {key!r}: {len(shapes)} shapes x "
+          f"{len(bits_list)} bit widths, {args.repeats} repeats", flush=True)
+
+    entries = []
+    t0 = time.perf_counter()
+    for m, k, n in shapes:
+        for bits in bits_list:
+            e = autotune.measure_entry(m, k, n, bits, repeats=args.repeats)
+            gain = e["default_ms"] / max(e["ms"], 1e-9)
+            print(f"  {m}x{k}x{n} b{bits}: best ({e['bm']},{e['bn']},"
+                  f"{e['bk']}) {e['ms']:.3f} ms  (default "
+                  f"{e['default_ms']:.3f} ms, {gain:.2f}x)", flush=True)
+            entries.append(e)
+    entries_by_key[key] = entries
+
+    path = autotune.save_table(entries_by_key, args.out)
+    print(f"[autotune] wrote {len(entries)} entries for {key!r} to {path} "
+          f"({time.perf_counter() - t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,6 +20,7 @@ import json
 import sys
 from pathlib import Path
 
+from benchmarks.common import refuse_backend_mismatch, runner_block
 from repro.core.closed_loop import (
     ClosedLoopConfig,
     HeroSearchRun,
@@ -102,8 +103,12 @@ def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
 
     The metric is machine-dependent: the committed baseline must come
     from hardware comparable to where the gate runs (refresh it from the
-    CI artifact if the gate trips without a perf-relevant change)."""
+    CI artifact if the gate trips without a perf-relevant change). Refuses
+    (fails) when the baseline's runner fingerprint differs from this
+    run's."""
     base = json.loads(Path(baseline_path).read_text())
+    if not refuse_backend_mismatch(report, base, "bench-search"):
+        return False
     want = float(base["policies_per_sec"])
     got = float(report["policies_per_sec"])
     floor = want * (1.0 - max_drop)
@@ -139,6 +144,7 @@ def main(argv=None):
     result, cfg, run = runner(scenes, budgets, seed=args.seed)
 
     report = bench_report(result, cfg)
+    report["runner"] = runner_block()
     if args.recovery:
         bundles = {s: run.bundle(s) for s in cfg.scenes}
         report["recovery"] = run_recovery(cfg, bundles, chaos_seed=args.seed)

@@ -33,6 +33,36 @@ SCENES = ("chair", "lego", "ficus")
 RESULTS_DIR = Path("experiments/ngp_tables")
 
 
+def runner_block() -> Dict:
+    """The runner fingerprint every BENCH_*.json embeds under "runner".
+
+    Machine-dependent throughput numbers are only comparable on the same
+    kernel backend + device; the regression gates refuse to compare
+    reports whose fingerprints differ (`refuse_backend_mismatch`)."""
+    from repro.kernels.backend import runner_fingerprint
+
+    return runner_fingerprint()
+
+
+def refuse_backend_mismatch(report: Dict, base: Dict, label: str) -> bool:
+    """True when `report` and `base` came from comparable runners.
+
+    Prints the refusal (and the fix: refresh the committed baseline on
+    THIS runner) when they did not — the caller must fail its gate, not
+    fall through to a meaningless number comparison."""
+    import sys
+
+    from repro.kernels.backend import fingerprint_mismatch
+
+    why = fingerprint_mismatch(base.get("runner"), report.get("runner"))
+    if why:
+        print(f"[{label}] BASELINE NOT COMPARABLE: {why}. Refusing the "
+              f"regression comparison — refresh the committed baseline "
+              f"from a run on this runner.", file=sys.stderr)
+        return False
+    return True
+
+
 @dataclasses.dataclass(frozen=True)
 class BenchScale:
     name: str

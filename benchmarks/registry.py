@@ -73,3 +73,8 @@ register(
     "packed-artifact bytes by policy + codec throughput + roundtrip PSNR "
     "parity gates (BENCH_artifact.json)",
 )
+register(
+    "autotune_quant_matmul", "benchmarks.autotune_quant_matmul", "main",
+    "regenerate the committed packed-matmul block-size autotune table for "
+    "this backend (src/repro/kernels/autotune_table.json)",
+)

@@ -12,11 +12,21 @@ Three engines over the same trained scene and held-out views:
 
 Reports rays/sec and per-evaluation ("episode eval") seconds, checks the
 fused-vs-reference PSNR parity band (0.1 dB), and writes BENCH_render.json
-at the repo root.
+at the repo root. The report embeds the runner fingerprint
+(kernel backend + device); `--check-baseline` gates fused rays/sec against
+a committed baseline and REFUSES the comparison when the fingerprints
+differ — cross-backend throughput deltas are meaningless, refresh the
+baseline on the new runner instead.
+
+`--quick` additionally replays the committed autotune-table entries for
+this backend and fails if a tuned block choice loses to the fixed 128^3
+default (beyond the noise margin); `--check-autotune` runs only that
+check, with no scene setup.
 
 Usage (repo root must be on the path for `benchmarks.common`):
   PYTHONPATH=src:. python benchmarks/render_throughput.py [--scale quick]
       [--repeats 3] [--quick]
+      [--check-baseline benchmarks/BENCH_render_baseline.json]
 """
 from __future__ import annotations
 
@@ -31,7 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import SCALES, BenchScale
+from benchmarks.common import (
+    SCALES, BenchScale, refuse_backend_mismatch, runner_block,
+)
 from repro.nerf.dataset import make_dataset
 from repro.nerf.fast_render import FastRenderEngine
 from repro.nerf.hash_encoding import HashEncodingConfig
@@ -75,6 +87,62 @@ def _time(fn, repeats: int) -> float:
     return (time.perf_counter() - t0) / repeats
 
 
+def check_autotune(margin: float = 1.2, repeats: int = 5):
+    """Replay tuned-vs-default for every committed autotune entry on this
+    backend. Returns (ok, rows); tuned "loses" when it is slower than the
+    128^3 default beyond the noise margin."""
+    from repro.kernels import autotune
+
+    key = autotune.backend_key()
+    entries = autotune.load_table().get("entries", {}).get(key, [])
+    if not entries:
+        print(f"[autotune] no measured entries for backend {key!r}; "
+              f"nothing to check (run benchmarks/autotune_quant_matmul.py)")
+        return True, []
+    ok, rows = True, []
+    for e in entries:
+        m, k, n, bits = int(e["m"]), int(e["k"]), int(e["n"]), int(e["bits"])
+        tuned = (int(e["bm"]), int(e["bn"]), int(e["bk"]))
+        t_ms = autotune.time_block(m, k, n, bits, tuned, repeats=repeats)
+        d_ms = autotune.time_block(
+            m, k, n, bits, autotune.DEFAULT_BLOCK, repeats=repeats
+        )
+        if t_ms > d_ms * margin:  # one retry absorbs scheduler noise
+            t_ms = min(t_ms,
+                       autotune.time_block(m, k, n, bits, tuned,
+                                           repeats=repeats))
+            d_ms = min(d_ms,
+                       autotune.time_block(m, k, n, bits,
+                                           autotune.DEFAULT_BLOCK,
+                                           repeats=repeats))
+        loses = t_ms > d_ms * margin
+        ok = ok and not loses
+        rows.append({
+            "m": m, "k": k, "n": n, "bits": bits,
+            "tuned": list(tuned), "tuned_ms": round(t_ms, 4),
+            "default_ms": round(d_ms, 4), "loses": loses,
+        })
+        print(f"[autotune] {m}x{k}x{n} b{bits}: tuned {tuned} "
+              f"{t_ms:8.3f} ms vs default {d_ms:8.3f} ms "
+              f"{'LOSES' if loses else 'ok'}")
+    return ok, rows
+
+
+def check_baseline(results: dict, baseline_path: str, max_drop: float) -> bool:
+    """Fused rays/sec must stay within `max_drop` of the committed
+    baseline — and the baseline must come from the same runner."""
+    base = json.loads(Path(baseline_path).read_text())
+    if not refuse_backend_mismatch(results, base, "render"):
+        return False
+    cur = float(results["engines"]["fused"]["rays_per_sec"])
+    ref = float(base["engines"]["fused"]["rays_per_sec"])
+    floor = ref * (1.0 - max_drop)
+    ok = cur >= floor
+    print(f"[gate] fused {cur:,.0f} rays/s vs baseline {ref:,.0f} "
+          f"(floor {floor:,.0f}): {'OK' if ok else 'REGRESSION'}")
+    return ok
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
@@ -85,8 +153,27 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=8,
                     help="uniform quantization width under test")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: quick scale")
+                    help="CI smoke: quick scale + autotune never-loses check")
+    ap.add_argument("--check-baseline", default=None,
+                    help="committed BENCH_render baseline JSON; gates fused "
+                         "rays/sec (refuses cross-runner comparison)")
+    ap.add_argument("--max-drop", type=float, default=0.25,
+                    help="allowed fused rays/sec drop vs baseline")
+    ap.add_argument("--check-autotune", action="store_true",
+                    help="only replay the committed autotune entries vs the "
+                         "128^3 default and exit (no scene setup)")
+    ap.add_argument("--autotune-margin", type=float, default=1.2,
+                    help="noise margin for the autotune never-loses check")
     args = ap.parse_args(argv)
+    if args.check_autotune:
+        ok, _ = check_autotune(margin=args.autotune_margin)
+        if not ok:
+            raise SystemExit(
+                "autotuned block config loses to the 128^3 default — "
+                "regenerate src/repro/kernels/autotune_table.json with "
+                "benchmarks/autotune_quant_matmul.py"
+            )
+        return
     if args.quick:
         args.scale = "quick"
 
@@ -131,6 +218,7 @@ def main(argv=None):
 
     results = {
         "scale": scale.name, "scene": args.scene, "bits": args.bits,
+        "runner": runner_block(),
         "rays_per_eval": n_rays, "n_samples": rcfg.n_samples,
         "occupancy": {
             "resolution": occ.resolution,
@@ -183,10 +271,24 @@ def main(argv=None):
     print(f"  fused-vs-reference PSNR delta:   {parity:.4f} dB "
           f"(acceptance band 0.1 dB)")
 
+    autotune_ok = True
+    if args.quick:
+        autotune_ok, rows = check_autotune(margin=args.autotune_margin)
+        results["autotune"] = {"ok": autotune_ok, "entries": rows}
+
     OUT_PATH.write_text(json.dumps(results, indent=2))
     print(f"\n[out] wrote {OUT_PATH}")
     if parity > 0.1:
         raise SystemExit(f"PSNR parity {parity:.3f} dB exceeds 0.1 dB band")
+    if not autotune_ok:
+        raise SystemExit(
+            "autotuned block config loses to the 128^3 default — "
+            "regenerate src/repro/kernels/autotune_table.json"
+        )
+    if args.check_baseline and not check_baseline(
+        results, args.check_baseline, args.max_drop
+    ):
+        raise SystemExit("fused render throughput gate failed")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from pathlib import Path
 
 import numpy as np
 
+from benchmarks.common import refuse_backend_mismatch, runner_block
 from repro.core.closed_loop import SceneScale, build_scene_env
 from repro.hero.artifact import QuantArtifact, compile_artifact
 from repro.hero.engine import serve_engine
@@ -135,6 +136,8 @@ def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
         print("[bench-burst] baseline has no 'burst' entry; gate skipped "
               "(refresh the committed baseline)")
         return True
+    if not refuse_backend_mismatch(report, base, "bench-burst"):
+        return False
     want = float(base["requests_per_sec"])
     got = float(report["requests_per_sec"])
     floor = want * (1.0 - max_drop)
@@ -198,6 +201,7 @@ def main(argv=None) -> int:
             cache_mb=args.cache_mb,
         )
     report["scale"] = "quick" if args.quick else "standard"
+    report["runner"] = runner_block()
 
     out = Path(args.out)
     merged = {}

@@ -22,6 +22,7 @@ import sys
 import tempfile
 from pathlib import Path
 
+from benchmarks.common import refuse_backend_mismatch, runner_block
 from repro.core.closed_loop import SceneScale, build_scene_env
 from repro.hero.artifact import compile_artifact
 from repro.hero.cli import run_serve
@@ -33,8 +34,12 @@ def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
     """True when requests/sec is within `max_drop` of the baseline.
 
     Machine-dependent metric: refresh the committed baseline from a CI
-    artifact if the gate trips without a perf-relevant change."""
+    artifact if the gate trips without a perf-relevant change. Refuses
+    (fails) when the baseline's runner fingerprint differs from this
+    run's — cross-backend req/s comparisons are meaningless."""
     base = json.loads(Path(baseline_path).read_text())
+    if not refuse_backend_mismatch(report, base, "bench-serve"):
+        return False
     want = float(base["requests_per_sec"])
     got = float(report["requests_per_sec"])
     floor = want * (1.0 - max_drop)
@@ -76,6 +81,7 @@ def main(argv=None) -> int:
             roundtrip_dir=tmp,  # measure the deployed bytes, not the object
         )
     report["scale"] = "quick" if args.quick else "standard"
+    report["runner"] = runner_block()
     Path(args.out).write_text(json.dumps(report, indent=2))
 
     lat = report["latency_ms"]

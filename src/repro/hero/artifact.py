@@ -43,11 +43,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.repack import DEFAULT_TILE_BK, unrepack_planar
 from repro.nerf.fast_render import (
     FastRenderEngine,
     FusedPack,
     build_fused_pack,
     fused_pack_stored_bytes,
+    repack_fused_pack,
 )
 from repro.nerf.hash_encoding import HashEncodingConfig
 from repro.nerf.ngp import (
@@ -129,6 +131,10 @@ class QuantArtifact:
         for lyr in self.pack.layers.values():
             total += sum(nb(v) for v in lyr.values())
         total += sum(nb(t) for t in self.pack.hash_tables.values())
+        # Staged compute-layout forms (tile-native words, concatenated
+        # dequantized tables, f32 carriers) are resident too — the cache
+        # charges for the speed, even though stored bytes don't change.
+        total += sum(nb(v) for v in self.pack.compute.values())
         return total
 
     def cache_key(self) -> str:
@@ -155,11 +161,18 @@ class QuantArtifact:
 
         def emit(key, v):
             if isinstance(v, PackedTensor):
+                # Disk ALWAYS holds the storage codec's planar word order
+                # (schema v2, byte-identical regardless of any runtime
+                # tile repack): `unrepack_planar` is the exact inverse
+                # permutation and a no-op for planar tensors.
+                v = unrepack_planar(v)
                 out[f"{key}{_SEP}pt{_SEP}words"] = np.asarray(v.words)
                 out[f"{key}{_SEP}pt{_SEP}scale"] = np.asarray(v.scale)
                 out[f"{key}{_SEP}pt{_SEP}offset"] = np.asarray(v.offset)
                 packed[key] = {
-                    "bits": int(v.bits), "shape": [int(s) for s in v.shape]
+                    "bits": int(v.bits),
+                    "shape": [int(s) for s in v.shape],
+                    "layout": "planar",
                 }
             else:
                 out[key] = np.asarray(v)
@@ -216,11 +229,17 @@ class QuantArtifact:
         return path
 
     @staticmethod
-    def load(path) -> "QuantArtifact":
+    def load(path, layout: str = f"tile:{DEFAULT_TILE_BK}") -> "QuantArtifact":
         """Load a saved bundle. Integrity (array-set match + per-array
         sha256 against the directory's OWN manifest) is verified for every
         schema version before any reconstruction; a v1 directory is then
-        auto-upgraded in memory (module docstring)."""
+        auto-upgraded in memory (module docstring).
+
+        `layout` picks the compute repack staged after verification (the
+        one-time tile-native permutation + fused-encode staging of
+        `repack_fused_pack`); pass `"planar"` to serve the bare
+        schema-v2 storage form unmodified (slower hot path, identical
+        numerics). Stored bytes are the same either way."""
         path = Path(path)
         manifest = json.loads((path / "manifest.json").read_text())
         version = int(manifest.get("schema_version", -1))
@@ -258,6 +277,7 @@ class QuantArtifact:
                 offset=jnp.asarray(arrays[f"{prefix}{_SEP}pt{_SEP}offset"]),
                 bits=int(meta["bits"]),
                 shape=tuple(int(s) for s in meta["shape"]),
+                layout=str(meta.get("layout", "planar")),
             )
 
         params: Dict[str, Dict] = {}
@@ -301,13 +321,15 @@ class QuantArtifact:
             units = make_quant_units(cfg)
             policy = QuantPolicy.uniform(units, 8).with_bits(bits)
             spec = spec_from_policy(cfg, policy, act_ranges)
-            pack = build_fused_pack(params, cfg, spec)
+            pack = build_fused_pack(params, cfg, spec, layout=layout)
             metrics["model_bytes"] = float(fused_pack_stored_bytes(pack))
         else:
             pack = FusedPack(
                 layers=layers, hash_tables=tables,
                 modes=tuple(manifest["pack_modes"]),
             )
+            if layout != "planar":
+                pack = repack_fused_pack(pack, layout)
 
         return QuantArtifact(
             scene=manifest["scene"],

@@ -41,6 +41,16 @@ from repro.hwsim.trace import NGPTrace
 from repro.quant.packing import policy_model_bytes
 
 
+def kernel_autotune_key() -> str:
+    """The measured block-size table key (`kernels/autotune.backend_key`)
+    the render kernels tune under on this host. Recorded in every
+    target's `describe()` so a deployed artifact carries which autotune
+    table its compile-time numbers were produced with."""
+    from repro.kernels.autotune import backend_key
+
+    return backend_key()
+
+
 # ---------------------------------------------------------------------------
 # The protocol
 # ---------------------------------------------------------------------------
@@ -175,6 +185,7 @@ class NeuRexTarget:
             "family": "neurex",
             "pipeline_overlap": self.pipeline_overlap,
             "config": dataclasses.asdict(self.hw),
+            "kernel_autotune": kernel_autotune_key(),
         }
 
 
@@ -358,6 +369,7 @@ class RooflineTarget:
             "name": self.name,
             "family": "roofline",
             "config": dataclasses.asdict(self.hw),
+            "kernel_autotune": kernel_autotune_key(),
         }
 
 

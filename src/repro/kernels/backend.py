@@ -10,7 +10,9 @@ dispatch policy in one place.
 """
 from __future__ import annotations
 
-from typing import Optional
+import os
+import platform
+from typing import Dict, Optional
 
 import jax
 
@@ -24,3 +26,46 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return not on_tpu()
     return bool(interpret)
+
+
+def runner_fingerprint() -> Dict[str, object]:
+    """Identity of the machine + kernel backend a benchmark ran on.
+
+    Embedded in every BENCH_*.json so the regression gates can refuse to
+    compare numbers produced by different backends (compiled Pallas on a
+    TPU vs interpret-mode on some CPU) or different machines — the root
+    cause of the recurring stale-baseline wart. `kernel_backend`,
+    `jax_backend`, and `device_kind` are the comparability key; the rest
+    is context for a human refreshing a baseline.
+    """
+    dev = jax.devices()[0]
+    return {
+        "kernel_backend": "interpret" if resolve_interpret(None)
+        else "compiled",
+        "jax_backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax_version": jax.__version__,
+        "cpu_count": os.cpu_count(),
+    }
+
+
+BACKEND_KEYS = ("kernel_backend", "jax_backend", "device_kind")
+
+
+def fingerprint_mismatch(a: Optional[dict], b: Optional[dict]):
+    """Why two runner fingerprints are not comparable, or None if they are.
+
+    Missing fingerprints (pre-PR-8 baselines) are treated as mismatched:
+    a baseline without provenance cannot gate anything honestly.
+    """
+    if not a or not b:
+        return "runner fingerprint missing (pre-layout-PR baseline?)"
+    diffs = [
+        f"{k}: {a.get(k)!r} vs {b.get(k)!r}"
+        for k in BACKEND_KEYS
+        if a.get(k) != b.get(k)
+    ]
+    return "; ".join(diffs) if diffs else None

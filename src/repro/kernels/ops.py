@@ -13,7 +13,10 @@ they never fall back to the reference.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.kernels import ref
+from repro.kernels import autotune as _autotune
 from repro.kernels.backend import on_tpu as _on_tpu
 from repro.kernels.alpha_composite import alpha_composite as _alpha_pallas
 from repro.kernels.decode_attention_kernel import (
@@ -27,6 +30,7 @@ from repro.kernels.quant_matmul import (
     quant_matmul as _qmm_pallas,
     quant_matmul_packed as _qmm_packed_pallas,
 )
+from repro.quant.packing import tile_layout_bk as _tile_layout_bk
 
 
 def _resolve(use_pallas):
@@ -35,10 +39,30 @@ def _resolve(use_pallas):
     return bool(use_pallas), True  # explicit True => interpret off-TPU
 
 
+def _fill_blocks(kw, m, k, n, bits, fixed_bk=None):
+    """Fill missing bm/bn/bk from the measured autotune table (falls back
+    to 128^3). Explicit caller kwargs always win; a tile-native weight
+    pins bk to its repack tile."""
+    if all(b in kw for b in ("bm", "bn", "bk")):
+        if fixed_bk is not None and kw["bk"] != fixed_bk:
+            raise ValueError(
+                f"bk={kw['bk']} conflicts with tile-native layout bk="
+                f"{fixed_bk}"
+            )
+        return kw
+    bm, bn, bk = _autotune.lookup_block(m, k, n, bits, fixed_bk=fixed_bk)
+    kw.setdefault("bm", bm)
+    kw.setdefault("bn", bn)
+    kw.setdefault("bk", bk)
+    return kw
+
+
 def quant_matmul(x_codes, w_codes, sx, sw, zx, use_pallas="auto", **kw):
     run, interpret = _resolve(use_pallas)
     if not run:
         return ref.quant_matmul_ref(x_codes, w_codes, sx, sw, zx)
+    kw = _fill_blocks(kw, x_codes.shape[0], x_codes.shape[1],
+                      w_codes.shape[1], 8)
     return _qmm_pallas(
         x_codes, w_codes, sx, sw, zx,
         interpret=interpret and not _on_tpu(), **kw,
@@ -48,15 +72,67 @@ def quant_matmul(x_codes, w_codes, sx, sw, zx, use_pallas="auto", **kw):
 def quant_matmul_packed(x_codes, wq, sx, sw, zx, use_pallas="auto", **kw):
     """`quant_matmul` over a sub-byte `PackedTensor` weight operand
     (`repro.quant.packing`). The Pallas path expands packed tiles to
-    int8-range codes inside the kernel (unpack-on-load); the reference
-    unpacks with the pure-jnp codec and reuses `quant_matmul_ref`."""
+    int8-range codes inside the kernel (unpack-on-load) and understands
+    both word layouts — the storage-planar order and the
+    `kernels/repack.py` tile-native order, whose repack bk pins the
+    kernel's K-tile; the reference unpacks with the pure-jnp codec
+    (layout-aware) and reuses `quant_matmul_ref`. Missing block sizes
+    come from the measured autotune table."""
     run, interpret = _resolve(use_pallas)
     if not run:
         return ref.quant_matmul_packed_ref(x_codes, wq, sx, sw, zx)
+    layout = getattr(wq, "layout", "planar")
+    fixed_bk = _tile_layout_bk(layout)
+    kw = _fill_blocks(kw, x_codes.shape[0], x_codes.shape[1], wq.cols,
+                      wq.bits, fixed_bk=fixed_bk)
     return _qmm_packed_pallas(
         x_codes, wq.words, wq.offset, sx, sw, zx, bits=wq.bits,
-        interpret=interpret and not _on_tpu(), **kw,
+        layout=layout, interpret=interpret and not _on_tpu(), **kw,
     )
+
+
+def hash_encode(corner_idx, corner_w, table_cat, level_offsets,
+                use_pallas="auto", **kw):
+    """Fused multi-level hash-grid encode: one gather over a concatenated
+    table + trilinear interpolation.
+
+    corner_idx    (L, B, 8) int32 — per-level in-table corner indices
+    corner_w      (L, B, 8) f32   — matching trilinear weights
+    table_cat     (T, F)    f32   — all level tables stacked row-wise
+    level_offsets (L,)      int32 — row offset of each level in table_cat
+
+    Returns (B, L*F) features in level-major column order — bit-identical
+    to gathering each level's table separately and concatenating (pinned
+    by tests). One fused gather instead of L keeps the whole encode in a
+    single kernel dispatch and sidesteps the per-level dequantize-inside-
+    the-gather fusion pathology on CPU backends.
+    """
+    L, B, C = corner_idx.shape
+    flat = (corner_idx + level_offsets[:, None, None]).reshape(-1)
+    vals = hash_gather(flat, table_cat, use_pallas=use_pallas, **kw)
+    vals = vals.reshape(L, B, C, -1)
+    feats = jnp.sum(vals * corner_w[..., None], axis=2)  # (L, B, F)
+    return jnp.moveaxis(feats, 0, 1).reshape(B, -1)
+
+
+def fused_field_query(corner_idx, corner_w, table_cat, level_offsets,
+                      wq, act, use_pallas="auto", **kw):
+    """hash_gather -> trilinear interp -> quantized matmul, the fused
+    first-layer field query of `FastRenderEngine`'s integer path.
+
+    `act` carries the activation grid of the first linear layer (the
+    FusedPack layer dict fields): sx scale, zx int zero point (int8-
+    shifted), zx_f float zero point, qmax code ceiling, off int8 shift.
+    `wq` is the layer's `PackedTensor` (planar or tile-native). Returns
+    the f32 pre-activation (B, N).
+    """
+    enc = hash_encode(corner_idx, corner_w, table_cat, level_offsets,
+                      use_pallas=use_pallas)
+    codes = jnp.clip(jnp.round(enc / act["sx"] + act["zx_f"]), 0.0,
+                     act["qmax"])
+    ci8 = (codes - act["off"]).astype(jnp.int8)
+    return quant_matmul_packed(ci8, wq, act["sx"], wq.scale, act["zx"],
+                               use_pallas=use_pallas, **kw)
 
 
 def alpha_composite(sigma, rgb, delta, use_pallas="auto", **kw):

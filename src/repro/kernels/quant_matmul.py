@@ -117,32 +117,46 @@ def quant_matmul(
 # Packed-weight variant: sub-byte words in, int8 codes inside the kernel.
 # ---------------------------------------------------------------------------
 def _unpack_tile(words, bits: int, bk: int):
-    """Bit-plane words ((bk//32)*bits, bn) -> unsigned codes (bk, bn).
+    """Storage-layout bit-plane words ((bk//32)*bits, bn) -> unsigned
+    codes (bk, bn).
 
-    Per 32-row group: broadcast each plane word across its 32 code rows,
-    shift by the in-group row index, mask the bit, accumulate planes.
-    Broadcast + 2-D iota + elementwise shift/and/or only — no gathers, no
-    sublane reshapes — so the expansion lowers on the VPU and runs
-    unchanged in interpret mode.
+    Planar rows are group-major (row g*bits + p): one reshape splits the
+    (group, plane) axes, then a single broadcast shift/mask expands every
+    plane word across its 32 code rows at once and the plane sum (planes
+    occupy disjoint bit positions, so + == |) collapses back. O(1) traced
+    ops regardless of groups x bits — the old per-plane slice + concat
+    loop emitted O(groups*bits) ops per tile trace.
     """
     n_groups = bk // 32
     bn = words.shape[-1]
-    pos = jax.lax.broadcasted_iota(jnp.int32, (32, bn), 0)
-    blocks = []
-    for g in range(n_groups):
-        u_g = jnp.zeros((32, bn), jnp.int32)
-        for p in range(bits):
-            plane = words[g * bits + p : g * bits + p + 1, :]  # (1, bn)
-            u_g = u_g | (
-                ((jnp.broadcast_to(plane, (32, bn)) >> pos) & 1) << p
-            )
-        blocks.append(u_g)
-    return jnp.concatenate(blocks, axis=0)  # (bk, bn)
+    w = words.reshape(n_groups, bits, 1, bn)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n_groups, bits, 32, bn), 2)
+    pln = jax.lax.broadcasted_iota(jnp.int32, (n_groups, bits, 32, bn), 1)
+    u = jnp.sum(((w >> pos) & 1) << pln, axis=1, dtype=jnp.int32)
+    return u.reshape(bk, bn)
+
+
+def _unpack_tile_native(words, bits: int, bk: int):
+    """``tile:<bk>``-layout words ((bk//32)*bits, bn) -> unsigned codes
+    (bk, bn).
+
+    The repack (`kernels/repack.py`) made rows plane-major within the
+    tile (row p*gt + g), so the reshape here splits (plane, group)
+    directly off the rows the BlockSpec delivered — no permutation, no
+    slicing; just the broadcast shift/mask and the plane sum.
+    """
+    gt = bk // 32
+    bn = words.shape[-1]
+    w = words.reshape(bits, gt, 1, bn)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bits, gt, 32, bn), 2)
+    pln = jax.lax.broadcasted_iota(jnp.int32, (bits, gt, 32, bn), 0)
+    u = jnp.sum(((w >> pos) & 1) << pln, axis=0, dtype=jnp.int32)
+    return u.reshape(bk, bn)
 
 
 def _qmm_packed_kernel(
     x_ref, w_ref, sx_ref, sw_ref, zx_ref, off_ref, o_ref, acc_ref,
-    *, n_k, bits, bk, k_rows,
+    *, n_k, bits, bk, k_rows, tile_native,
 ):
     """Packed-weight version of `_qmm_kernel`: identical accumulation
     algebra, but the weight tile is expanded from bit-plane words first.
@@ -160,7 +174,8 @@ def _qmm_packed_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.int32)
-    u = _unpack_tile(w_ref[...], bits, bk)
+    unpack = _unpack_tile_native if tile_native else _unpack_tile
+    u = unpack(w_ref[...], bits, bk)
     q = u + off_ref[0, 0]
     row = jax.lax.broadcasted_iota(jnp.int32, q.shape, 0) + k * bk
     q = jnp.where(row < k_rows, q, 0)
@@ -179,11 +194,11 @@ def _qmm_packed_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret", "layout")
 )
 def quant_matmul_packed(
     x_codes: jnp.ndarray,  # (M, K) int8 activation codes
-    w_words: jnp.ndarray,  # (ceil(K/32)*bits, N) int32 bit-plane words
+    w_words: jnp.ndarray,  # int32 bit-plane words (layout below)
     w_offset: jnp.ndarray,  # scalar int32 code offset (q = u + offset)
     sx: jnp.ndarray,  # scalar f32 activation scale
     sw: jnp.ndarray,  # scalar f32 weight scale
@@ -193,25 +208,42 @@ def quant_matmul_packed(
     bn: int = 128,
     bk: int = 128,
     interpret: Optional[bool] = None,
+    layout: str = "planar",
 ) -> jnp.ndarray:
-    """f32 (M, N) = ((x - zx) @ unpack(w)) * sx * sw, weights packed."""
+    """f32 (M, N) = ((x - zx) @ unpack(w)) * sx * sw, weights packed.
+
+    `layout="planar"`: w_words is the storage codec's (ceil(K/32)*bits, N)
+    group-major order; rows are padded here, per call, to whole K-tiles.
+    `layout="tile:<bk>"`: w_words was repacked once by
+    `kernels/repack.py` to exactly ceil(K/bk) plane-major tile blocks —
+    no row padding happens on the call path, and `bk` must equal the
+    repack tile (enforced).
+    """
     interpret = resolve_interpret(interpret)
     assert bk % 32 == 0, bk
+    tile_native = layout != "planar"
+    if tile_native:
+        assert layout == f"tile:{bk}", (layout, bk)
     M, K = x_codes.shape
     wr, N = w_words.shape
-    groups = -(-K // 32)
-    assert wr == groups * bits, (w_words.shape, K, bits)
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     xp = jnp.pad(x_codes, ((0, pm), (0, pk)))
-    wr_full = ((K + pk) // 32) * bits
-    wp = jnp.pad(w_words, ((0, wr_full - wr), (0, pn)))
+    wrows = (bk // 32) * bits
+    if tile_native:
+        assert wr == ((K + pk) // bk) * wrows, (w_words.shape, K, bits, bk)
+        wp = jnp.pad(w_words, ((0, 0), (0, pn)))
+    else:
+        groups = -(-K // 32)
+        assert wr == groups * bits, (w_words.shape, K, bits)
+        wr_full = ((K + pk) // 32) * bits
+        wp = jnp.pad(w_words, ((0, wr_full - wr), (0, pn)))
     Mp, Kp, Np = M + pm, K + pk, N + pn
     n_k = Kp // bk
-    wrows = (bk // 32) * bits
 
     out = pl.pallas_call(
         functools.partial(
-            _qmm_packed_kernel, n_k=n_k, bits=bits, bk=bk, k_rows=K
+            _qmm_packed_kernel, n_k=n_k, bits=bits, bk=bk, k_rows=K,
+            tile_native=tile_native,
         ),
         grid=(Mp // bm, Np // bn, n_k),
         in_specs=[

@@ -1,0 +1,57 @@
+"""One-time repack of stored packed weights into the kernel-native layout.
+
+The storage codec (`repro.quant.packing`, PR 5) orders bit-plane words
+group-major — all planes of one 32-code group adjacent — which is what
+the artifact writes to disk and what `model_bytes` measures. The Pallas
+matmul kernel wants the opposite order within each K-tile: plane-major,
+so expanding a tile to int8 codes is one reshape plus a broadcast
+shift/mask with no per-plane slicing (the same move
+`gptq_marlin_repack.cu` makes for CUDA int4 weights).
+
+This module is the `PackedTensor`-level API over the exact word
+permutations in `repro.quant.packing`:
+
+  - `repack_tile_native(pt, bk)`: planar -> ``tile:<bk>`` compute layout.
+    Lossless; `pt.codes()`, `pt.nbytes_packed`, scale/offset/bits/shape
+    are all unchanged. Runs once at artifact compile/load time — never
+    per call.
+  - `unrepack_planar(pt)`: exact inverse, restoring the storage words
+    bit-for-bit (pinned by tests) so a repacked pack can always be
+    serialized back to the schema-v2 byte stream.
+
+The repacked words include zero-padding groups that round the group
+count up to a whole number of K-tiles; those decode to masked rows
+inside the kernel and are NOT counted by `nbytes_packed` — the compute
+layout never changes stored bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.quant.packing import (
+    PackedTensor,
+    planar_words_from_tile,
+    tile_layout_bk,
+    tile_words_from_planar,
+)
+
+DEFAULT_TILE_BK = 128  # MXU-aligned; 128*bits is a multiple of 32 for all bits
+
+
+def repack_tile_native(pt: PackedTensor, bk: int = DEFAULT_TILE_BK
+                       ) -> PackedTensor:
+    """Return `pt` with words permuted to the ``tile:<bk>`` layout."""
+    bk = int(bk)
+    if pt.layout == f"tile:{bk}":
+        return pt
+    words = tile_words_from_planar(pt.planar_words(), pt.bits, pt.rows, bk)
+    return dataclasses.replace(pt, words=words, layout=f"tile:{bk}")
+
+
+def unrepack_planar(pt: PackedTensor) -> PackedTensor:
+    """Return `pt` in the storage layout (byte-identical planar words)."""
+    bk = tile_layout_bk(pt.layout)
+    if bk is None:
+        return pt
+    words = planar_words_from_tile(pt.words, pt.bits, pt.rows, bk)
+    return dataclasses.replace(pt, words=words, layout="planar")

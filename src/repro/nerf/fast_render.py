@@ -61,9 +61,12 @@ import numpy as np
 from repro.kernels.backend import on_tpu
 from repro.kernels.ops import (
     alpha_composite as ops_alpha_composite,
+    fused_field_query as ops_fused_field_query,
+    hash_encode as ops_hash_encode,
     hash_gather as ops_hash_gather,
     quant_matmul_packed as ops_quant_matmul_packed,
 )
+from repro.kernels.repack import DEFAULT_TILE_BK, repack_tile_native
 from repro.nerf.hash_encoding import level_corner_data
 from repro.nerf.ngp import (
     NGPConfig,
@@ -108,15 +111,27 @@ class FusedPack:
     >= 16 sentinel. Hash tables likewise: `PackedTensor` integer codes +
     scale for bits <= 8 (the bits actually shrink the pack), f32 carriers
     above. `fused_pack_stored_bytes` measures exactly these payloads.
+
+    `layers` / `hash_tables` are always the STORAGE truth (planar packed
+    words) — what the artifact serializes and `model_bytes` measures.
+    `compute` holds the derived kernel-native forms staged once by
+    `repack_fused_pack` (`layout` records which repack): tile-native
+    packed words per layer, the concatenated dequantized hash table for
+    the fused encode, float weight carriers. Dropping `compute` loses
+    speed, never data.
     """
 
     layers: Dict[str, Dict[str, jnp.ndarray]]
     hash_tables: Dict[str, jnp.ndarray]
     modes: Tuple[str, ...]
+    layout: str = "planar"
+    compute: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
 
 
 jax.tree_util.register_dataclass(
-    FusedPack, data_fields=["layers", "hash_tables"], meta_fields=["modes"]
+    FusedPack,
+    data_fields=["layers", "hash_tables", "compute"],
+    meta_fields=["modes", "layout"],
 )
 
 
@@ -131,9 +146,17 @@ def _pack_weight(w, bits: float, paper_exact: bool) -> PackedTensor:
 
 
 def build_fused_pack(
-    params: Dict, cfg: NGPConfig, spec: Optional[NGPQuantSpec] = None
+    params: Dict,
+    cfg: NGPConfig,
+    spec: Optional[NGPQuantSpec] = None,
+    layout: str = f"tile:{DEFAULT_TILE_BK}",
 ) -> FusedPack:
     """Lower a (params, spec) pair to packed integer inference form.
+
+    `layout` selects the staged compute representation
+    (`repack_fused_pack`): the default tile-native repack + fused-encode
+    staging, or `"planar"` for the bare storage-only pack (schema-v2
+    compatibility; identical numerics, slower hot path).
 
     Requires a CONCRETE spec (host floats, not tracers): the bit widths
     pick the lowering per layer at build time, and the packing windows
@@ -206,7 +229,49 @@ def build_fused_pack(
             tables[f"level_{l}"] = fake_quant_weight(t, qp)
         else:
             tables[f"level_{l}"] = t
-    return FusedPack(layers=layers, hash_tables=tables, modes=tuple(modes))
+    pack = FusedPack(layers=layers, hash_tables=tables, modes=tuple(modes))
+    return repack_fused_pack(pack, layout) if layout != "planar" else pack
+
+
+def repack_fused_pack(
+    pack: FusedPack, layout: str = f"tile:{DEFAULT_TILE_BK}"
+) -> FusedPack:
+    """Stage the compute-layout forms next to the storage pack (one-time,
+    at artifact compile/load or pack build — never per render call).
+
+    compute entries:
+      "table_cat"       (sum_l T_l, F) f32 — every level table
+                        dequantized and stacked row-wise, so the fused
+                        encode is ONE gather with no per-level
+                        dequantize inside the jitted hot path;
+      "table_off"       (L,) int32 — each level's row offset in the cat;
+      "<name>::wq_tile" tile-native `PackedTensor` per packed layer (the
+                        `kernels/repack.py` permutation the matmul
+                        kernel unpacks with a single broadcast shift);
+      "<name>::w_f32"   dequantized f32 carrier per packed layer for the
+                        off-TPU float path (same codes, staged once).
+
+    `layers`/`hash_tables` are untouched — serialization still sees only
+    the storage truth, byte-identical to schema v2.
+    """
+    if layout == "planar":
+        return dataclasses.replace(pack, layout=layout, compute={})
+    bk = int(layout.split(":", 1)[1])
+    compute: Dict[str, jnp.ndarray] = {}
+    tabs, offs, row = [], [], 0
+    for l in range(len(pack.hash_tables)):
+        t = pack.hash_tables[f"level_{l}"]
+        t = t.dequantize() if isinstance(t, PackedTensor) else t
+        tabs.append(t)
+        offs.append(row)
+        row += t.shape[0]
+    compute["table_cat"] = jnp.concatenate(tabs, axis=0)
+    compute["table_off"] = jnp.asarray(offs, jnp.int32)
+    for name, lyr in pack.layers.items():
+        if "wq" in lyr:
+            compute[f"{name}::wq_tile"] = repack_tile_native(lyr["wq"], bk)
+            compute[f"{name}::w_f32"] = lyr["wq"].dequantize()
+    return dataclasses.replace(pack, layout=layout, compute=compute)
 
 
 def fused_pack_stored_bytes(pack: FusedPack) -> int:
@@ -229,11 +294,26 @@ def fused_pack_stored_bytes(pack: FusedPack) -> int:
     return total
 
 
-def _fused_weight_f32(lyr) -> jnp.ndarray:
-    """The layer's float-carrier weight: dequantized packed codes when the
-    storage is sub-byte, the stored f32 carrier otherwise."""
+def _use_kernels(use_pallas) -> bool:
+    """Whether the integer Pallas matmul path is active (vs the float
+    carrier of the same codes, the off-TPU default)."""
+    return use_pallas is True or (use_pallas == "auto" and on_tpu())
+
+
+def _layer_wq(pack: FusedPack, name: str) -> PackedTensor:
+    """The kernel-facing packed weight: the staged tile-native repack
+    when present, the storage-planar words otherwise."""
+    return pack.compute.get(f"{name}::wq_tile", pack.layers[name]["wq"])
+
+
+def _fused_weight_f32(pack: FusedPack, name: str) -> jnp.ndarray:
+    """The layer's float-carrier weight: the staged dequantized carrier
+    when present, dequantized packed codes when the storage is sub-byte,
+    the stored f32 carrier otherwise."""
+    lyr = pack.layers[name]
     if "wq" in lyr:
-        return lyr["wq"].dequantize()
+        staged = pack.compute.get(f"{name}::w_f32")
+        return lyr["wq"].dequantize() if staged is None else staged
     return lyr["w"]
 
 
@@ -242,23 +322,25 @@ def _fused_linear(pack: FusedPack, i: int, name: str, x, use_pallas):
     mode = pack.modes[i]
     if mode == "int":
         codes = jnp.clip(jnp.round(x / lyr["sx"] + lyr["zx_f"]), 0.0, lyr["qmax"])
-        if use_pallas is True or (use_pallas == "auto" and on_tpu()):
+        if _use_kernels(use_pallas):
             ci8 = (codes - lyr["off"]).astype(jnp.int8)
             y = ops_quant_matmul_packed(
-                ci8, lyr["wq"], lyr["sx"], lyr["wq"].scale, lyr["zx"],
-                use_pallas=use_pallas,
+                ci8, _layer_wq(pack, name), lyr["sx"], lyr["wq"].scale,
+                lyr["zx"], use_pallas=use_pallas,
             )
         else:
             # Float carrier of the SAME stored codes (module docstring):
             # (codes - Z) * s is exactly the dequantized activation, the
             # unpacked code grid exactly the kernel's weights.
-            y = ((codes - lyr["zx_f"]) * lyr["sx"]) @ _fused_weight_f32(lyr)
+            y = ((codes - lyr["zx_f"]) * lyr["sx"]) @ _fused_weight_f32(
+                pack, name
+            )
         return y + lyr["b"]
     if mode == "float_qact":
         codes = jnp.clip(jnp.round(x / lyr["sx"] + lyr["zx_f"]), 0.0, lyr["qmax"])
         xq = (codes - lyr["zx_f"]) * lyr["sx"]
-        return xq @ _fused_weight_f32(lyr) + lyr["b"]
-    return x @ _fused_weight_f32(lyr) + lyr["b"]
+        return xq @ _fused_weight_f32(pack, name) + lyr["b"]
+    return x @ _fused_weight_f32(pack, name) + lyr["b"]
 
 
 def fused_ngp_apply(
@@ -273,27 +355,54 @@ def fused_ngp_apply(
     """Integer-mode field query. Mirrors `ngp_apply`'s fake-quant forward;
     exact up to float roundoff (integer accumulation where lowered).
     `corner_data` / `sh` take the geometry-only work precomputed by a
-    `CullPlan` for fixed sample points."""
-    feats = []
-    for l in range(cfg.hash.n_levels):
-        if corner_data is None:
-            idx, w = level_corner_data(points, l, cfg.hash)  # (P, 8)
-        else:
-            idx, w = corner_data[0][l], corner_data[1][l]
-        table = pack.hash_tables[f"level_{l}"]
-        if isinstance(table, PackedTensor):
-            # Stored form is integer codes in packed words; the gather
-            # runs over the dequantized grid (codes * scale), expanded
-            # inside the jitted call — DRAM holds the packed bytes.
-            table = table.dequantize()
-        vals = ops_hash_gather(
-            idx.reshape(-1), table, use_pallas=use_pallas
-        ).reshape(idx.shape + (cfg.hash.n_features,))
-        feats.append(jnp.sum(vals * w[..., None], axis=1))
-    enc = jnp.concatenate(feats, axis=-1)
+    `CullPlan` for fixed sample points.
 
+    With a repacked pack (`pack.compute` staged) the encode is the fused
+    one-gather `ops.hash_encode` over the staged concatenated table —
+    this keeps per-level `dequantize()` out of the jitted hot path, where
+    XLA:CPU fuses it into every gather lane — and, on the kernel path,
+    the first linear folds into `ops.fused_field_query`."""
     names = ngp_linear_names(cfg)
-    h = _fused_linear(pack, 0, names[0], enc, use_pallas)
+    L = cfg.hash.n_levels
+    if "table_cat" in pack.compute:
+        if corner_data is None:
+            per_level = [level_corner_data(points, l, cfg.hash)
+                         for l in range(L)]
+            idx = jnp.stack([i for i, _ in per_level])  # (L, P, 8)
+            w = jnp.stack([w_ for _, w_ in per_level])
+        else:
+            idx, w = corner_data
+        cat, off = pack.compute["table_cat"], pack.compute["table_off"]
+        if pack.modes[0] == "int" and _use_kernels(use_pallas):
+            lyr = pack.layers[names[0]]
+            h = ops_fused_field_query(
+                idx, w, cat, off, _layer_wq(pack, names[0]), lyr,
+                use_pallas=use_pallas,
+            ) + lyr["b"]
+        else:
+            enc = ops_hash_encode(idx, w, cat, off, use_pallas=use_pallas)
+            h = _fused_linear(pack, 0, names[0], enc, use_pallas)
+    else:
+        # Storage-only pack (schema-v2 artifact loaded without repack):
+        # per-level gathers over tables dequantized inside the call.
+        feats = []
+        for l in range(L):
+            if corner_data is None:
+                idx, w = level_corner_data(points, l, cfg.hash)  # (P, 8)
+            else:
+                idx, w = corner_data[0][l], corner_data[1][l]
+            table = pack.hash_tables[f"level_{l}"]
+            if isinstance(table, PackedTensor):
+                # Stored form is integer codes in packed words; the gather
+                # runs over the dequantized grid (codes * scale), expanded
+                # inside the jitted call — DRAM holds the packed bytes.
+                table = table.dequantize()
+            vals = ops_hash_gather(
+                idx.reshape(-1), table, use_pallas=use_pallas
+            ).reshape(idx.shape + (cfg.hash.n_features,))
+            feats.append(jnp.sum(vals * w[..., None], axis=1))
+        enc = jnp.concatenate(feats, axis=-1)
+        h = _fused_linear(pack, 0, names[0], enc, use_pallas)
     h = jax.nn.relu(h)
     h = _fused_linear(pack, 1, names[1], h, use_pallas)
     raw_sigma, geo = h[..., 0], h[..., 1:]

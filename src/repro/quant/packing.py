@@ -32,6 +32,25 @@ code (plus row padding to the next multiple of 32) for EVERY bits in
 128-row matmul tile always covers whole groups (128 * bits is a multiple
 of 32), so Pallas K-tiles never split a code across tile boundaries.
 
+Storage layout vs compute layout
+--------------------------------
+The bit-plane order above is the STORAGE layout (`layout="planar"`):
+plane words of one group are adjacent, which is what the codec wants and
+what the artifact writes to disk. The Pallas matmul kernel wants the
+opposite within each K-tile: all words of one plane adjacent, so the
+in-kernel expansion is a single reshape + broadcast shift with no
+per-plane slicing. `tile_words_from_planar` / `planar_words_from_tile`
+are the exact word permutations between the two:
+
+    tile row  t*(gt*bits) + p*gt + g   <->   planar row  (t*gt + g)*bits + p
+
+with gt = bk // 32 groups per K-tile and the trailing tile zero-padded
+with empty groups. The permutation is lossless (`planar_words_from_tile`
+restores the planar words bit-for-bit), so a tile-native `PackedTensor`
+decodes through the same `codes()` and measures the same
+`nbytes_packed` — the compute layout never leaks into stored bytes.
+`kernels/repack.py` owns the `PackedTensor`-level repack API.
+
 Codes and the one-LSB clamp edge
 --------------------------------
 Codes are stored offset-binary: the packed word holds u = q - offset
@@ -68,6 +87,19 @@ def packed_groups(rows: int) -> int:
     return -(-int(rows) // WORD_BITS)
 
 
+def tile_layout_bk(layout: str):
+    """K-tile size of a ``"tile:<bk>"`` layout string, None for planar."""
+    if layout == "planar":
+        return None
+    if layout.startswith("tile:"):
+        bk = int(layout.split(":", 1)[1])
+        if bk <= 0 or bk % WORD_BITS:
+            raise ValueError(f"tile layout bk must be a positive multiple "
+                             f"of {WORD_BITS}: {layout!r}")
+        return bk
+    raise ValueError(f"unknown packed layout {layout!r}")
+
+
 # ---------------------------------------------------------------------------
 # PackedTensor
 # ---------------------------------------------------------------------------
@@ -82,6 +114,11 @@ class PackedTensor:
                        offset = -Z and `dequantize` yields (q - Z) * s)
     bits   static int        — code width, 1..8
     shape  static tuple      — logical tensor shape restored by unpack
+    layout static str        — word order: "planar" (storage codec, what
+                               the artifact writes) or "tile:<bk>" (the
+                               MXU/VMEM-tile-native permutation produced
+                               by `kernels/repack.py` for the matmul
+                               kernel's in-register unpack)
     """
 
     words: jnp.ndarray
@@ -89,6 +126,7 @@ class PackedTensor:
     offset: jnp.ndarray
     bits: int
     shape: Tuple[int, ...]
+    layout: str = "planar"
 
     @property
     def rows(self) -> int:
@@ -100,13 +138,23 @@ class PackedTensor:
 
     @property
     def nbytes_packed(self) -> int:
-        """Exact stored payload bytes (the words array)."""
+        """Exact stored payload bytes: the PLANAR words array. Layout
+        independent — the tile permutation only pads with empty groups in
+        memory and never changes what the artifact stores."""
         return packed_groups(self.rows) * self.bits * self.cols * 4
+
+    def planar_words(self) -> jnp.ndarray:
+        """The storage-layout words, whatever layout this tensor holds."""
+        bk = tile_layout_bk(self.layout)
+        if bk is None:
+            return self.words
+        return planar_words_from_tile(self.words, self.bits, self.rows, bk)
 
     def codes(self) -> jnp.ndarray:
         """Signed integer codes q (int32, logical shape). Pure jnp —
-        traceable inside jit."""
-        return unpack_words(self.words, self.bits, self.shape) + self.offset
+        traceable inside jit. Layout aware."""
+        return unpack_words(self.planar_words(), self.bits, self.shape) \
+            + self.offset
 
     def dequantize(self) -> jnp.ndarray:
         """Float tensor q * scale (f32, logical shape)."""
@@ -116,7 +164,7 @@ class PackedTensor:
 jax.tree_util.register_dataclass(
     PackedTensor,
     data_fields=["words", "scale", "offset"],
-    meta_fields=["bits", "shape"],
+    meta_fields=["bits", "shape", "layout"],
 )
 
 
@@ -143,16 +191,54 @@ def pack_words(u: jnp.ndarray, bits: int) -> jnp.ndarray:
 def unpack_words(
     words: jnp.ndarray, bits: int, shape: Sequence[int]
 ) -> jnp.ndarray:
-    """Invert `pack_words` -> unsigned codes u (int32, logical shape)."""
+    """Invert `pack_words` -> unsigned codes u (int32, logical shape).
+
+    One reshape + broadcast shift/mask/sum — no per-plane slicing, so the
+    traced graph is O(1) ops regardless of `bits` (planes are disjoint
+    bit positions, so summing them equals OR-ing them)."""
     assert 1 <= bits <= 8, bits
     rows, cols = _rows_cols(shape)
     g = packed_groups(rows)
-    w = jnp.asarray(words, jnp.int32).reshape(g, bits, cols)
-    pos = jnp.arange(WORD_BITS, dtype=jnp.int32)[None, :, None]
-    u = jnp.zeros((g, WORD_BITS, cols), jnp.int32)
-    for p in range(bits):
-        u = u | (((w[:, p : p + 1, :] >> pos) & 1) << p)
+    w = jnp.asarray(words, jnp.int32).reshape(g, bits, 1, cols)
+    pos = jnp.arange(WORD_BITS, dtype=jnp.int32)[None, None, :, None]
+    plane = jnp.arange(bits, dtype=jnp.int32)[None, :, None, None]
+    u = jnp.sum(((w >> pos) & 1) << plane, axis=1, dtype=jnp.int32)
     return u.reshape(g * WORD_BITS, cols)[:rows].reshape(tuple(shape))
+
+
+def tile_words_from_planar(
+    words: jnp.ndarray, bits: int, rows: int, bk: int
+) -> jnp.ndarray:
+    """Permute planar bit-plane words into the K-tile-native order.
+
+    Output row t*(gt*bits) + p*gt + g holds planar row (t*gt + g)*bits + p
+    (gt = bk // 32 groups per tile); the trailing tile is padded with
+    zero words so every K-tile block is exactly gt*bits rows."""
+    bk = int(bk)
+    assert bk > 0 and bk % WORD_BITS == 0, bk
+    g = packed_groups(rows)
+    gt = bk // WORD_BITS
+    t = -(-g // gt)
+    cols = int(words.shape[-1])
+    w = jnp.asarray(words, jnp.int32).reshape(g, bits, cols)
+    w = jnp.pad(w, ((0, t * gt - g), (0, 0), (0, 0)))
+    w = w.reshape(t, gt, bits, cols).transpose(0, 2, 1, 3)
+    return w.reshape(t * bits * gt, cols)
+
+
+def planar_words_from_tile(
+    words: jnp.ndarray, bits: int, rows: int, bk: int
+) -> jnp.ndarray:
+    """Exact inverse of `tile_words_from_planar` (drops the pad groups)."""
+    bk = int(bk)
+    assert bk > 0 and bk % WORD_BITS == 0, bk
+    g = packed_groups(rows)
+    gt = bk // WORD_BITS
+    t = -(-g // gt)
+    cols = int(words.shape[-1])
+    w = jnp.asarray(words, jnp.int32).reshape(t, bits, gt, cols)
+    w = w.transpose(0, 2, 1, 3).reshape(t * gt, bits, cols)[:g]
+    return w.reshape(g * bits, cols)
 
 
 def pack_codes(

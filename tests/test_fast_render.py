@@ -30,6 +30,7 @@ from repro.nerf.occupancy import (
     bake_occupancy,
     cull_budget,
     occupancy_lookup,
+    sample_active_mask,
 )
 from repro.nerf.render import RenderConfig, render_rays
 from repro.nerf.train import TrainConfig, evaluate_psnr, psnr, train_ngp
@@ -177,6 +178,58 @@ def test_culling_matches_masked_oracle(params, rays):
         params, ro, rd, CFG, RCFG, None, occ=occ, mode="reference", plan=plan,
     )
     np.testing.assert_allclose(np.asarray(got_plan), np.asarray(want), atol=2e-5)
+
+
+def test_plan_compaction_byte_identical_to_cumsum_fallback(rays):
+    """The pure-gather CullPlan is a host-precomputed transcript of
+    exactly what the dynamic cumsum+scatter fallback does: over one
+    flattened sample population, the staged buffers, validity mask, and
+    masked gather reconstruction are byte-identical (assert_array_equal,
+    no tolerance). End-to-end colors differ by ~1 ulp only because the
+    two paths compute sample POINTS on host vs device (np.linspace vs
+    jnp.linspace) — the compaction itself is a lossless reordering."""
+    ro, rd = rays
+    rng = np.random.RandomState(7)
+    occ = OccupancyGrid(
+        occ=jnp.asarray((rng.rand(8, 8, 8) < 0.4).astype(np.float32)),
+        resolution=8, threshold=0.0, occupied_fraction=0.4,
+    )
+    plan = build_cull_plan(
+        occ, np.asarray(ro)[None], np.asarray(rd)[None], None, RCFG, CFG
+    )
+    B = plan.budget
+
+    # The fallback's compaction (the occ branch of the chunk renderer),
+    # replayed over the same host-staged samples the plan was built from.
+    active, pts = sample_active_mask(occ, np.asarray(ro), np.asarray(rd),
+                                     RCFG)
+    flat_active = jnp.asarray(active.reshape(-1))
+    flat_pts = jnp.asarray(
+        np.clip(pts + 0.5, 0.0, 1.0).reshape(-1, 3).astype(np.float32)
+    )
+    flat_dirs = jnp.asarray(np.broadcast_to(
+        np.asarray(rd, np.float32)[:, None, :], pts.shape
+    ).reshape(-1, 3))
+    rank = jnp.cumsum(flat_active) - 1
+    valid = flat_active & (rank < B)
+    pos = jnp.where(valid, rank, B)
+    buf_pts = jnp.zeros((B, 3)).at[pos].set(flat_pts, mode="drop")
+    buf_dirs = jnp.zeros((B, 3)).at[pos].set(flat_dirs, mode="drop")
+    take = jnp.clip(rank, 0, B - 1)
+
+    np.testing.assert_array_equal(np.asarray(plan.buf_pts[0]),
+                                  np.asarray(buf_pts))
+    np.testing.assert_array_equal(np.asarray(plan.buf_dirs[0]),
+                                  np.asarray(buf_dirs))
+    np.testing.assert_array_equal(np.asarray(plan.valid[0]),
+                                  np.asarray(valid))
+    # take differs only on invalid slots (plan parks them at 0, the
+    # fallback at the clipped rank) — the masked reconstruction both
+    # paths actually use must agree bit-for-bit.
+    vals = jax.random.normal(jax.random.PRNGKey(5), (B,))
+    rec_plan = jnp.where(plan.valid[0], vals[plan.take[0]], 0.0)
+    rec_dyn = jnp.where(valid, vals[take], 0.0)
+    np.testing.assert_array_equal(np.asarray(rec_plan), np.asarray(rec_dyn))
 
 
 def test_empty_grid_renders_background(params, rays):

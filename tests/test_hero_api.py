@@ -280,6 +280,47 @@ def test_artifact_roundtrip_identical_psnr(tiny_env, tiny_artifact, tmp_path):
     assert psnr_loaded == psnr_inproc  # 0.0000 dB delta, exactly
 
 
+def test_tile_repack_invisible_on_disk(tiny_artifact, tmp_path):
+    """Tentpole storage pin: the tile-native compute layout NEVER reaches
+    disk. A tile-layout load re-saves byte-identical arrays (same sha256
+    set, same npz contents) — storage stays schema-v2 planar."""
+    p1 = tiny_artifact.save(tmp_path / "a")
+    loaded = hero.QuantArtifact.load(p1)  # default: tile-native compute
+    assert loaded.pack.layout.startswith("tile:")
+    assert loaded.pack.compute  # staged tile words / dequant carriers
+    # Derived compute is resident cost, not storage truth.
+    lean = dataclasses.replace(
+        loaded, pack=dataclasses.replace(loaded.pack, compute={})
+    )
+    assert loaded.resident_bytes() > lean.resident_bytes()
+    assert loaded.stored_model_bytes() == tiny_artifact.stored_model_bytes()
+
+    p2 = loaded.save(tmp_path / "b")
+    m1 = json.loads((p1 / "manifest.json").read_text())["arrays"]
+    m2 = json.loads((p2 / "manifest.json").read_text())["arrays"]
+    assert {k: v["sha256"] for k, v in m1.items()} == \
+           {k: v["sha256"] for k, v in m2.items()}
+    with np.load(p1 / "arrays.npz") as z1, np.load(p2 / "arrays.npz") as z2:
+        assert sorted(z1.files) == sorted(z2.files)
+        for k in z1.files:
+            np.testing.assert_array_equal(z1[k], z2[k])
+
+
+def test_planar_layout_load_serves_identically(tiny_env, tiny_artifact,
+                                               tmp_path):
+    """layout="planar" opts out of the compile-time repack (storage-only
+    pack, no staged compute) and still serves the same numbers."""
+    path = tiny_artifact.save(tmp_path / "art")
+    tile = hero.QuantArtifact.load(path)
+    planar = hero.QuantArtifact.load(path, layout="planar")
+    assert planar.pack.layout == "planar"
+    assert not planar.pack.compute
+    ds = tiny_env.dataset
+    assert tile.engine().evaluate_psnr(ds) == pytest.approx(
+        planar.engine().evaluate_psnr(ds), abs=1e-6
+    )
+
+
 def test_artifact_integrity_check_fails_loudly(tiny_artifact, tmp_path):
     path = tiny_artifact.save(tmp_path / "art")
     manifest = json.loads((path / "manifest.json").read_text())

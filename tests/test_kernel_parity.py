@@ -1,0 +1,237 @@
+"""Packed-kernel parity: storage-planar and tile-native word layouts,
+K-padding zero-point handling, block-size invariance, and the fused
+field-query entry — all pinned bit-identical to the jnp reference.
+
+This file is the CI fast-lane "kernel parity" gate (bits 2/4/6/8 run in
+interpret mode there); keep it dependency-light and seconds-fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import ops
+from repro.kernels import autotune
+from repro.kernels.quant_matmul import quant_matmul, quant_matmul_packed
+from repro.kernels.repack import (
+    DEFAULT_TILE_BK,
+    repack_tile_native,
+    unrepack_planar,
+)
+from repro.quant.packing import pack_codes
+
+
+def _packed(k, n, bits, seed=0, scale=0.02):
+    rng = np.random.RandomState(seed)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return pack_codes(rng.randint(lo, hi + 1, size=(k, n)), bits, scale=scale)
+
+
+def _x(m, k, seed=1):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(-128, 128, size=(m, k)), jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# K-padding zero-point regression (the suspected unpack-hot-path bug):
+# when K % bk != 0 the kernel zero-pads both operands' K tiles. A nonzero
+# activation zero point zx must NOT pick up the padded weight rows — the
+# padded w codes are zero, so both x.w and zx*colsum(w) see nothing. Pin
+# that with K values that leave ragged tails at every block size.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k,bk", [(129, 64), (129, 128), (200, 128),
+                                  (33, 128)])
+@pytest.mark.parametrize("zx", [17, 128])
+def test_int8_kpad_zero_point_exact(k, bk, zx):
+    m, n = 33, 16
+    x = _x(m, k)
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randint(-127, 128, size=(k, n)), jnp.int8)
+    got = quant_matmul(x, w, 0.037, 0.011, zx, bm=32, bn=16, bk=bk)
+    want = ref.quant_matmul_ref(x, w, 0.037, 0.011, zx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("k,bk", [(129, 64), (129, 128)])
+@pytest.mark.parametrize("zx", [17, 128])
+def test_packed_kpad_zero_point_exact(k, bk, zx):
+    m, n, bits = 33, 16, 4
+    x, wq = _x(m, k), _packed(k, n, bits)
+    got = quant_matmul_packed(
+        x, wq.words, wq.offset, 0.037, wq.scale, zx,
+        bits=bits, bm=32, bn=16, bk=bk,
+    )
+    want = ref.quant_matmul_packed_ref(x, wq, 0.037, wq.scale, zx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Planar and tile-native unpack-on-load, every bit width
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 6, 7, 8])
+def test_packed_planar_parity_all_bits(bits):
+    m, k, n = 33, 129, 16
+    x, wq = _x(m, k), _packed(k, n, bits)
+    got = ops.quant_matmul_packed(x, wq, 0.1, wq.scale, 17,
+                                  use_pallas=True, bm=32, bn=16, bk=64)
+    want = ref.quant_matmul_packed_ref(x, wq, 0.1, wq.scale, 17)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 6, 7, 8])
+def test_packed_tile_native_parity_all_bits(bits):
+    m, k, n = 33, 129, 16
+    x, wq = _x(m, k), _packed(k, n, bits)
+    wt = repack_tile_native(wq, bk=128)
+    assert wt.layout == "tile:128"
+    got = ops.quant_matmul_packed(x, wt, 0.1, wt.scale, 17, use_pallas=True)
+    want = ref.quant_matmul_packed_ref(x, wq, 0.1, wq.scale, 17)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_tile_native_reference_path_matches():
+    """use_pallas=False on a tile-native weight unpacks via the layout-
+    aware codec — same numbers as the planar reference."""
+    x, wq = _x(17, 65), _packed(65, 9, 3)
+    wt = repack_tile_native(wq, bk=64)
+    got = ops.quant_matmul_packed(x, wt, 0.1, wt.scale, 5, use_pallas=False)
+    want = ops.quant_matmul_packed(x, wq, 0.1, wq.scale, 5, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [1, 4, 7, 8])
+@pytest.mark.parametrize("bk", [32, 64, 128, 256])
+def test_repack_roundtrip_byte_identity(bits, bk):
+    wq = _packed(129, 7, bits)
+    wt = repack_tile_native(wq, bk=bk)
+    back = unrepack_planar(wt)
+    assert back.layout == "planar"
+    np.testing.assert_array_equal(np.asarray(back.words),
+                                  np.asarray(wq.words))
+    np.testing.assert_array_equal(np.asarray(wt.codes()),
+                                  np.asarray(wq.codes()))
+    assert wt.nbytes_packed == wq.nbytes_packed  # storage accounting
+
+
+def test_repack_is_idempotent_and_checks_layout():
+    wq = _packed(64, 8, 4)
+    wt = repack_tile_native(wq, bk=DEFAULT_TILE_BK)
+    assert repack_tile_native(wt, bk=DEFAULT_TILE_BK) is wt
+
+
+# ---------------------------------------------------------------------------
+# Block sizes never change numerics; tile layout pins bk
+# ---------------------------------------------------------------------------
+def test_block_size_invariance():
+    x, wq = _x(70, 200), _packed(200, 24, 5)
+    outs = [
+        np.asarray(ops.quant_matmul_packed(
+            x, wq, 0.1, wq.scale, 9, use_pallas=True, bm=bm, bn=bn, bk=bk
+        ))
+        for bm, bn, bk in [(32, 16, 64), (128, 128, 128), (256, 128, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_tile_layout_pins_bk():
+    x, wq = _x(33, 129), _packed(129, 16, 4)
+    wt = repack_tile_native(wq, bk=128)
+    with pytest.raises(ValueError, match="tile-native"):
+        ops.quant_matmul_packed(x, wt, 0.1, wt.scale, 3,
+                                use_pallas=True, bm=128, bn=128, bk=64)
+
+
+# ---------------------------------------------------------------------------
+# Fused field-query entry: hash_encode and fused_field_query
+# ---------------------------------------------------------------------------
+def _hash_inputs(L=3, B=37, T=64, F=2, seed=3):
+    rng = np.random.RandomState(seed)
+    idx = jnp.asarray(rng.randint(0, T, size=(L, B, 8)), jnp.int32)
+    w = jnp.asarray(rng.dirichlet(np.ones(8), size=(L, B)), jnp.float32)
+    tables = [jnp.asarray(rng.randn(T, F), jnp.float32) for _ in range(L)]
+    cat = jnp.concatenate(tables, axis=0)
+    off = jnp.asarray([l * T for l in range(L)], jnp.int32)
+    return idx, w, tables, cat, off
+
+
+def test_hash_encode_matches_per_level_gather():
+    idx, w, tables, cat, off = _hash_inputs()
+    got = ops.hash_encode(idx, w, cat, off, use_pallas=False)
+    per_level = [
+        jnp.sum(tables[l][idx[l]] * w[l][..., None], axis=1)
+        for l in range(len(tables))
+    ]
+    want = jnp.concatenate(per_level, axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fused_field_query_matches_manual_pipeline():
+    idx, w, _, cat, off = _hash_inputs(L=4, B=29, T=32, F=2)
+    K = 4 * 2
+    wq = _packed(K, 16, 4, scale=0.03)
+    wt = repack_tile_native(wq)
+    act = {"sx": 0.05, "zx_f": 128.0, "qmax": 255.0, "off": 128,
+           "zx": jnp.int32(0)}
+    got = ops.fused_field_query(idx, w, cat, off, wt, act, use_pallas=True)
+
+    enc = ops.hash_encode(idx, w, cat, off, use_pallas=False)
+    codes = jnp.clip(jnp.round(enc / act["sx"] + act["zx_f"]), 0.0,
+                     act["qmax"])
+    ci8 = (codes - act["off"]).astype(jnp.int8)
+    want = ref.quant_matmul_packed_ref(ci8, wq, act["sx"], wq.scale,
+                                       act["zx"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Autotune lookup: measured-table selection, fixed_bk pinning, fallback
+# ---------------------------------------------------------------------------
+_TABLE = {"version": 1, "entries": {"test:backend": [
+    {"m": 6656, "k": 16, "n": 16, "bits": 8,
+     "bm": 512, "bn": 128, "bk": 128, "ms": 1.0, "default_ms": 2.0},
+    {"m": 64, "k": 256, "n": 64, "bits": 2,
+     "bm": 128, "bn": 128, "bk": 256, "ms": 1.0, "default_ms": 2.0},
+]}}
+
+
+def test_lookup_block_nearest_entry():
+    got = autotune.lookup_block(6000, 16, 16, 8, table=_TABLE,
+                                key="test:backend")
+    assert got == (512, 128, 128)
+    got = autotune.lookup_block(60, 300, 60, 2, table=_TABLE,
+                                key="test:backend")
+    assert got == (128, 128, 256)
+
+
+def test_lookup_block_fixed_bk_filters_and_falls_back():
+    got = autotune.lookup_block(64, 256, 64, 2, fixed_bk=128, table=_TABLE,
+                                key="test:backend")
+    assert got == (512, 128, 128)  # only the bk=128 entry survives
+    got = autotune.lookup_block(64, 256, 64, 2, fixed_bk=64, table=_TABLE,
+                                key="test:backend")
+    assert got == (128, 128, 64)  # nothing measured at bk=64: default, pinned
+
+
+def test_lookup_block_empty_table_default():
+    assert autotune.lookup_block(10, 10, 10, table={"entries": {}},
+                                 key="x") == autotune.DEFAULT_BLOCK
+
+
+def test_committed_table_entries_well_formed():
+    """The committed autotune_table.json (if present) parses and every
+    entry carries the fields lookup/never-loses need, MXU-aligned."""
+    table = autotune.load_table()
+    for key, entries in table.get("entries", {}).items():
+        for e in entries:
+            for f in ("m", "k", "n", "bits", "bm", "bn", "bk", "ms",
+                      "default_ms"):
+                assert f in e, (key, e)
+            assert e["bm"] % 128 == 0 and e["bn"] % 128 == 0
+            assert e["bk"] % 128 == 0
