@@ -1,0 +1,103 @@
+"""LM-workload closed-loop benchmark: policies/sec + Pareto frontier of
+`hero-search --workload lm` over an arch x budget grid.
+
+Writes ``BENCH_lm.json`` (the `bench_report` schema plus the runner
+fingerprint block, `workload: "lm"`). With `--check-baseline`, fails
+(exit 1) when policies/sec drops more than `--max-drop` below the
+committed baseline or when the baseline's runner fingerprint differs
+from this machine's (cross-backend numbers are not comparable). The JSON
+is written BEFORE the gates fire so a failing run still uploads its
+numbers.
+
+Usage (repo root on the path for `benchmarks.*`):
+  PYTHONPATH=src:. python benchmarks/lm_search.py --quick
+  PYTHONPATH=src:. python benchmarks/lm_search.py --quick \
+      --check-baseline benchmarks/BENCH_lm_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import refuse_backend_mismatch, runner_block
+from repro.core.closed_loop import ClosedLoopConfig, HeroSearchRun, bench_report
+
+
+def run_search(arches, budgets, seed=0, quick=True, verbose=True):
+    cfg = ClosedLoopConfig(
+        scenes=tuple(arches),
+        budget_fracs=tuple(budgets),
+        seed=seed,
+        n_iterations=2 if quick else 6,
+        population=4 if quick else 12,
+        workload="lm",
+        hardware="roofline-lm",
+        verbose=verbose,
+    )
+    run = HeroSearchRun(cfg)
+    return run.run(), cfg
+
+
+def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
+    """True when policies/sec is within `max_drop` of the committed
+    baseline AND the baseline came from this runner fingerprint (PR-8
+    rule: refuse cross-backend comparisons instead of mis-gating)."""
+    base = json.loads(Path(baseline_path).read_text())
+    if not refuse_backend_mismatch(report, base, "bench-lm"):
+        return False
+    want = float(base["policies_per_sec"])
+    got = float(report["policies_per_sec"])
+    floor = want * (1.0 - max_drop)
+    ok = got >= floor
+    print(f"[bench-lm] regression gate: {got:.2f} policies/s vs "
+          f"baseline {want:.2f} (floor {floor:.2f}, max drop "
+          f"{max_drop:.0%}) -> {'OK' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--arch", default="qwen2-7b",
+                    help="comma-separated LM arch ids (SMOKE configs)")
+    ap.add_argument("--budgets", default="1.0,0.85")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_lm.json")
+    ap.add_argument("--check-baseline", default=None,
+                    help="baseline BENCH_lm.json to gate against")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional policies/sec drop vs baseline")
+    args = ap.parse_args(argv)
+
+    arches = [a for a in args.arch.split(",") if a]
+    budgets = [float(b) for b in args.budgets.split(",") if b]
+    result, cfg = run_search(arches, budgets, seed=args.seed,
+                             quick=args.quick)
+
+    report = bench_report(result, cfg)
+    report["runner"] = runner_block()
+    Path(args.out).write_text(json.dumps(report, indent=2))
+
+    print(f"\n== LM closed-loop search ({'quick' if args.quick else 'full'}"
+          f" scale, {len(arches)} arch x {len(budgets)} budgets) ==")
+    print(f"  policies evaluated:  {report['policies_evaluated']}")
+    print(f"  policies/sec:        {report['policies_per_sec']:.2f}")
+    print(f"  frontier size:       {report['frontier_size']} "
+          f"(HV {report['frontier_hypervolume']:.4f})")
+    print(f"  wrote {args.out}")
+
+    if not (report["frontier_valid_vs_8bit"] and report["frontier_size"] > 0):
+        print("[bench-lm] FRONTIER INVALID vs fixed-8-bit baseline",
+              file=sys.stderr)
+        return 1
+    if args.check_baseline and not check_baseline(
+        report, args.check_baseline, args.max_drop
+    ):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

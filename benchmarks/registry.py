@@ -59,6 +59,11 @@ register(
     "closed-loop search: policies/sec + Pareto frontier (BENCH_search.json)",
 )
 register(
+    "lm_search", "benchmarks.lm_search", "main",
+    "LM-workload closed-loop search: policies/sec + Pareto frontier "
+    "(BENCH_lm.json)",
+)
+register(
     "serve", "benchmarks.serve_throughput", "main",
     "hero.serve request-batching render service: requests/sec + latency "
     "percentiles (BENCH_serve.json)",

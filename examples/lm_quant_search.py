@@ -1,119 +1,61 @@
 """HERO's technique applied to an assigned LM architecture (DESIGN.md §4):
 embedding-band bits (the hash-level analogue) + per-layer W/A bits, searched
-with the same DDPG agent against a TPU roofline cost model instead of the
-NeuRex simulator.
+by the full closed loop against the registered `roofline-lm` decode cost
+model — the same CEM + DDPG population search, Pareto frontier, and
+checkpointing the NeRF scenes run through.
+
+This is a thin driver over `repro.workloads.lm.LMWorkload`; the cost model
+lives in `repro.hero.targets` (`roofline-lm`), not here. Equivalent CLI:
+
+  hero-search --workload lm --arch qwen2-7b --quick
 
 Runs the qwen2-7b SMOKE config on CPU: real loss deltas from real forward
-passes, hardware feedback from the analytic v5e cost model.
+passes, hardware feedback from the analytic v5e roofline.
 
-  PYTHONPATH=src python examples/lm_quant_search.py --episodes 6
+  PYTHONPATH=src python examples/lm_quant_search.py --iterations 2
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_arch
-from repro.core.action import action_to_bits
-from repro.core.ddpg import DDPGAgent, DDPGConfig
-from repro.core.reward import hero_reward
-from repro.data import TokenPipeline, TokenPipelineConfig
-from repro.distributed.hlo_analysis import ChipSpec
-from repro.models import lm
-
-
-def lm_cost_model(cfg, embed_bits, w_bits, chip=ChipSpec()):
-    """Weight-bound serving cost: bytes moved per decode step scale with the
-    per-unit bit widths (the LM analogue of the NeuRex latency model)."""
-    d, V = cfg.d_model, cfg.vocab_size
-    from repro.models.lm import embed_band_boundaries
-
-    bounds = embed_band_boundaries(V, len(embed_bits))
-    embed_bytes = sum(
-        (bounds[i + 1] - bounds[i]) * d * embed_bits[i] / 8
-        for i in range(len(embed_bits))
-    )
-    per_layer = np.array([
-        d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim,
-        cfg.n_heads * cfg.head_dim * d,
-        d * cfg.d_ff * (2 if cfg.ffn_type in ("swiglu", "geglu") else 1),
-        cfg.d_ff * d,
-    ])
-    w_bytes = float(np.sum(per_layer[None, :] * np.asarray(w_bits) / 8.0))
-    return (embed_bytes + w_bytes) / chip.hbm_bw  # seconds per token
+from repro.core.closed_loop import ClosedLoopConfig, HeroSearchRun
+from repro.workloads.lm import LMEnvConfig, LMWorkload
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
-    ap.add_argument("--episodes", type=int, default=6)
+    ap.add_argument("--iterations", type=int, default=2,
+                    help="search iterations per budget cell")
+    ap.add_argument("--population", type=int, default=8)
+    ap.add_argument("--budgets", default="1.0,0.85",
+                    help="comma-separated latency-budget fractions")
     args = ap.parse_args()
 
-    cfg = get_arch(args.arch).smoke
-    key = jax.random.PRNGKey(0)
-    params = lm.init_params(cfg, key)
-    pipe = TokenPipeline(TokenPipelineConfig(
-        vocab_size=cfg.vocab_size, seq_len=64, global_batch=4))
-    batch = {"tokens": jnp.asarray(pipe.batch())}
+    budgets = tuple(float(b) for b in args.budgets.split(","))
+    cfg = ClosedLoopConfig(
+        scenes=(args.arch,),
+        budget_fracs=budgets,
+        n_iterations=args.iterations,
+        population=args.population,
+        workload="lm",
+        hardware="roofline-lm",
+        checkpoint_path=None,
+        verbose=True,
+    )
+    run = HeroSearchRun(cfg, workload=LMWorkload(LMEnvConfig()))
 
-    # quality metric: delta log-perplexity vs full precision
-    base_loss, _ = lm.loss_fn(params, batch, cfg)
-    base_loss = float(base_loss)
-    n_layers = lm.total_layers(cfg)
-    n_units = cfg.n_embed_bands + n_layers * 2  # band bits + per-layer W/A
-    base_cost = lm_cost_model(cfg, [8.0] * cfg.n_embed_bands,
-                              [[8.0] * 4] * n_layers)
-
-    loss_fn = jax.jit(lambda p, b, s: lm.loss_fn(p, b, cfg, spec=s)[0])
-
-    def evaluate(bits):
-        eb = jnp.asarray(bits[: cfg.n_embed_bands], jnp.float32)
-        rest = bits[cfg.n_embed_bands:]
-        wb = np.zeros((n_layers, lm.N_GROUPS), np.float32)
-        ab = np.zeros((n_layers, lm.N_GROUPS), np.float32)
-        for l in range(n_layers):
-            wb[l, :] = rest[2 * l]
-            ab[l, :] = rest[2 * l + 1]
-        spec = lm.LMQuantSpec(eb, jnp.asarray(wb), jnp.asarray(ab))
-        loss = float(loss_fn(params, batch, spec))
-        cost = lm_cost_model(cfg, bits[: cfg.n_embed_bands], wb)
-        # "PSNR-like" quality in dB-ish units: -10*log10 of excess loss
-        quality = -10 * np.log10(max(loss - base_loss, 1e-4) + 1e-4)
-        q_org = -10 * np.log10(2e-4)
-        return hero_reward(quality, q_org, cost, base_cost), loss, cost
-
-    agent = DDPGAgent(DDPGConfig(warmup_episodes=2, updates_per_episode=8))
-    obs0 = np.ones(7, np.float32)
-    best = None
     t0 = time.time()
-    for ep in range(args.episodes):
-        actions, transitions = [], []
-        prev = 1.0
-        for i in range(n_units):
-            obs = np.asarray(
-                [1.0, i / n_units, prev, 0, i, prev, float(i % 2)], np.float32
-            )
-            a = agent.act(obs)
-            actions.append(a)
-            transitions.append((obs, [a], obs, i == n_units - 1))
-            prev = a
-        bits = [action_to_bits(a) for a in actions]
-        reward, loss, cost = evaluate(bits)
-        agent.observe_episode(transitions, reward)
-        agent.update()
-        fqr = sum(bits) / len(bits)
-        print(f"ep {ep}: reward {reward:+.3f} loss {loss:.4f} "
-              f"(fp {base_loss:.4f}) cost {cost*1e6:.1f}us/tok fqr {fqr:.2f}")
-        if best is None or reward > best[0]:
-            best = (reward, bits, loss, cost)
+    result = run.run()
 
-    r, bits, loss, cost = best
-    print(f"\nbest policy: loss {loss:.4f} vs fp {base_loss:.4f}, "
-          f"{cost*1e6:.1f} us/token (8-bit: {base_cost*1e6:.1f}), "
-          f"FQR {sum(bits)/len(bits):.2f}")
-    print(f"embed band bits: {bits[:cfg.n_embed_bands]}")
+    print(f"\njoint frontier: {len(result.frontier)} point(s), "
+          f"hypervolume {result.hypervolume():.4f}")
+    for p in result.frontier.points:
+        print(f"  {p.scene}: lat ratio {p.latency:.3f}, "
+              f"quality delta {p.psnr:+.2f} dB, size ratio "
+              f"{p.model_bytes:.3f}, FQR {sum(p.bits)/len(p.bits):.2f}")
+    best = max(result.cells, key=lambda c: c.best_reward)
+    print(f"best cell {best.scene}@{best.budget_frac}: "
+          f"reward {best.best_reward:+.3f}, bits {list(best.best_bits)}")
     print(f"total {time.time()-t0:.0f}s")
 
 

@@ -14,8 +14,10 @@
              (shared scene bundles, sharded population scoring, cell-
              granular checkpoint/resume of the frontier)
 - baselines: PTQ / QAT / CAQ-proxy comparison methods
-- lm_env:    the same technique applied to the assigned LM architectures,
-             with a TPU roofline cost model as hardware feedback
+
+The loop is workload-generic: `repro.workloads` supplies the per-case
+bundles (`nerf` scene adapter, `lm` — the same technique on the assigned
+LM architectures with the `roofline-lm` decode cost model as feedback).
 """
 from repro.core.action import action_to_bits, bits_to_action
 from repro.core.ddpg import DDPGAgent, DDPGConfig, ReplayBuffer

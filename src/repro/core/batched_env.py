@@ -216,6 +216,12 @@ class BatchedQuantEnv:
         mse = np.maximum(np.asarray(mse, np.float64), 1e-12)
         return -10.0 * np.log10(mse)
 
+    def proxy_quality(self, params, bits_batch: np.ndarray) -> np.ndarray:
+        """(K,) proxy quality in dB — the workload-protocol name for the
+        proxy PSNR (what `repro.workloads` bundles expose; the LM batched
+        env's dB-like loss delta is the counterpart)."""
+        return self._psnr(params, bits_batch)
+
     def simulate_batch(self, bits_batch: np.ndarray) -> Dict[str, np.ndarray]:
         """Latency/size metrics only ((K,) arrays), no rendering. Routes
         through the device-sharded fused model when sharding is on."""

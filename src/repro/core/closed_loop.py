@@ -6,14 +6,22 @@ Gen-NeRF) frames the real problem as navigating a multi-workload design
 space under several hardware budgets at once. `HeroSearchRun` composes
 the pieces the previous PRs built into that loop:
 
-  scene grid ──► per-scene NGPQuantEnv (shared occupancy bake, one
-                 BatchedQuantEnv each, device-sharded when the host has
-                 more than one device)
+  scene grid ──► per-case workload bundle (`repro.workloads`): the NeRF
+                 workload trains an NGPQuantEnv per scene (shared
+                 occupancy bake, one BatchedQuantEnv each, device-sharded
+                 when the host has more than one device); the LM workload
+                 builds an LMQuantEnv per arch id
   budget grid ─► per-cell `hero_population_search` with the budget passed
                  as call state (no env mutation, envs are shared)
   every evaluated policy ─► per-scene raw `ParetoFrontier` + one joint
                  frontier over scene-normalized objectives (latency ratio
                  and PSNR delta vs that scene's all-8-bit baseline)
+
+The loop itself is workload-generic: everything below drives the bundle
+through the duck-typed surface documented in `repro.workloads.base`
+(`ClosedLoopConfig.workload` picks the registered implementation; NeRF
+remains the default and keeps byte-identical frontiers + checkpoint
+fingerprints vs the pre-protocol code).
 
 The run is a deterministic function of its PRNG seed: cells execute in a
 fixed order with seeds derived per (scene, budget) cell, every stochastic
@@ -42,6 +50,12 @@ from repro.core.env import EnvConfig, NGPQuantEnv
 from repro.core.pareto import ConstraintSet, ParetoFrontier, ParetoPoint
 from repro.core.search import PopulationSearchConfig, hero_population_search
 from repro.hero.targets import HardwareTarget, resolve_target
+from repro.workloads.base import Workload, WorkloadBundle
+
+# The scene bundle IS the generic workload bundle (the dataclass moved to
+# repro.workloads.base when the loop went workload-generic); the alias
+# keeps every existing NeRF call site and annotation working unchanged.
+SceneBundle = WorkloadBundle
 
 # Joint-frontier hypervolume reference (normalized objectives): latency
 # ratio <= 1x the 8-bit baseline, PSNR delta >= -5 dB, size ratio <= 1.
@@ -88,44 +102,6 @@ class SceneScale:
         return SceneScale(
             image_hw=12, n_train_views=3, n_test_views=2, train_steps=20,
             finetune_steps=2, trace_rays=32, proxy_rays=64, n_samples=8,
-        )
-
-
-@dataclasses.dataclass
-class SceneBundle:
-    """Everything the loop needs per scene, built once and shared across
-    budgets: the scalar env (trace, calibration, occupancy bake, 8-bit
-    baselines) and its batched/sharded population wrapper."""
-
-    scene: str
-    env: NGPQuantEnv
-    benv: BatchedQuantEnv
-    baseline_latency: float  # all-8-bit cycles (env.original_cost)
-    baseline_psnr: float  # all-8-bit PSNR through the proxy
-    # All-8-bit PACKED model size (shared size function in
-    # repro.quant.packing — equals an 8-bit artifact's stored bytes), the
-    # denominator of the joint frontier's size ratio.
-    baseline_bytes: float
-
-    def baseline_point(self) -> ParetoPoint:
-        return ParetoPoint(
-            latency=self.baseline_latency,
-            psnr=self.baseline_psnr,
-            model_bytes=self.baseline_bytes,
-            bits=tuple([8] * self.env.n_units),
-            scene=self.scene,
-            reward=0.0,
-        )
-
-    def normalize(self, p: ParetoPoint) -> ParetoPoint:
-        """Raw metrics -> scene-normalized objectives (cross-scene joint
-        frontier): latency/size as ratios vs the 8-bit baseline, PSNR as
-        a delta against the 8-bit proxy PSNR."""
-        return dataclasses.replace(
-            p,
-            latency=p.latency / self.baseline_latency,
-            psnr=p.psnr - self.baseline_psnr,
-            model_bytes=p.model_bytes / self.baseline_bytes,
         )
 
 
@@ -250,10 +226,16 @@ class ClosedLoopConfig:
     # repro.hero.targets); part of the checkpoint fingerprint because the
     # frontier's latency axis means nothing across targets.
     hardware: str = "neurex"
+    # Registered workload name (`repro.workloads`): what kind of task the
+    # `scenes` entries name — NeRF scene names or LM arch ids.
+    workload: str = "nerf"
 
     def fingerprint(self) -> Dict:
-        """Config identity a checkpoint must match to be resumable."""
-        return {
+        """Config identity a checkpoint must match to be resumable. The
+        `workload` key is only present for non-NeRF runs so every pre-
+        refactor NeRF checkpoint fingerprint stays byte-identical (and
+        resumable) across the workload-generic refactor."""
+        fp = {
             "scenes": list(self.scenes),
             "budget_fracs": [float(f) for f in self.budget_fracs],
             "seed": self.seed,
@@ -263,6 +245,9 @@ class ClosedLoopConfig:
             "agent_fraction": self.agent_fraction,
             "hardware": self.hardware,
         }
+        if self.workload != "nerf":
+            fp["workload"] = self.workload
+        return fp
 
 
 # ---------------------------------------------------------------------------
@@ -462,26 +447,39 @@ class HeroSearchRun:
         cfg: ClosedLoopConfig = ClosedLoopConfig(),
         bundles: Optional[Dict[str, SceneBundle]] = None,
         target: Optional[HardwareTarget] = None,
+        workload: Optional[Workload] = None,
     ):
         """`target=` injects a `HardwareTarget` INSTANCE for scene-env
         building (overriding the by-name `cfg.hardware` resolution) —
-        the hook for unregistered or pre-configured targets."""
+        the hook for unregistered or pre-configured targets. `workload=`
+        likewise injects a `Workload` INSTANCE (overriding the by-name
+        `cfg.workload` resolution), e.g. an `LMWorkload` with non-default
+        eval knobs."""
         self.cfg = cfg
         self._bundles: Dict[str, SceneBundle] = dict(bundles or {})
         self._target = target
+        self._workload = workload
         # Scene merge constants, gathered from built bundles or restored
         # from a checkpoint (whichever happens first wins — they are equal
         # by construction, both derive from the same seeded training).
         self._scene_meta: Dict[str, SceneMeta] = {}
 
     # ------------------------------------------------------------------
+    @property
+    def workload(self) -> Workload:
+        if self._workload is None:
+            from repro.workloads import get_workload
+
+            self._workload = get_workload(self.cfg.workload)
+        return self._workload
+
     def bundle(self, scene: str) -> SceneBundle:
         if scene not in self._bundles:
             if self.cfg.verbose:
                 print(f"[closed-loop] building scene bundle {scene!r} ...",
                       flush=True)
-            self._bundles[scene] = build_scene_bundle(
-                scene, self.cfg.scale, seed=self._scene_seed(scene),
+            self._bundles[scene] = self.workload.build_bundle(
+                scene, scale=self.cfg.scale, seed=self._scene_seed(scene),
                 sharded=self.cfg.sharded,
                 hardware=self._target if self._target is not None
                 else self.cfg.hardware,
@@ -516,6 +514,13 @@ class HeroSearchRun:
         fp = self.cfg.fingerprint()
         if self._target is not None:
             fp["hardware"] = self._target.describe()
+        if self.cfg.workload != "nerf":
+            # Non-default workloads carry their eval knobs (an LM run's
+            # batch/seq/eval sizes change every quality number) — NeRF
+            # stays knob-free here for pre-refactor compatibility.
+            wl = self.workload
+            if hasattr(wl, "describe"):
+                fp["workload_config"] = wl.describe()
         return fp
 
     def _quarantine_checkpoint(self, path: str, why: str) -> None:
@@ -834,7 +839,9 @@ class HeroSearchRun:
         b = self.FIXED_BIT_REFERENCE
         bits = np.full((1, bundle.env.n_units), b, np.int32)
         sim = bundle.benv.simulate_batch(bits)
-        psnr = bundle.benv._psnr(bundle.env.params, bits.astype(np.float32))
+        psnr = bundle.benv.proxy_quality(
+            bundle.env.params, bits.astype(np.float32)
+        )
         return ParetoPoint(
             latency=float(sim["total_cycles"][0]),
             psnr=float(psnr[0]),
@@ -889,6 +896,7 @@ def bench_report(result: ClosedLoopResult, cfg: ClosedLoopConfig) -> Dict:
         "scenes": list(cfg.scenes),
         "budget_fracs": [float(f) for f in cfg.budget_fracs],
         "hardware": cfg.hardware,
+        "workload": cfg.workload,
         "seed": cfg.seed,
         "scale": dataclasses.asdict(cfg.scale),
         "n_iterations": cfg.n_iterations,

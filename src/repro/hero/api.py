@@ -26,7 +26,8 @@ def search(
     scenes: Sequence[str] = ("chair", "lego"),
     budget_fracs: Sequence[float] = (1.0, 0.85),
     *,
-    hardware: Union[str, HardwareTarget] = "neurex",
+    workload: str = "nerf",
+    hardware: Union[str, HardwareTarget, None] = None,
     scale=None,  # SceneScale; None = SceneScale.quick()
     n_iterations: int = 4,
     population: int = 8,
@@ -37,16 +38,22 @@ def search(
     verbose: bool = True,
     stop_after_cells: Optional[int] = None,
 ):
-    """Closed-loop HERO search over scenes x latency budgets.
+    """Closed-loop HERO search over cases x latency budgets.
 
-    Returns a `ClosedLoopResult` (joint + per-scene Pareto frontiers,
-    per-cell summaries). `hardware` is a registered target name (see
-    `repro.hero.list_targets()`) or a `HardwareTarget` instance.
+    Returns a `ClosedLoopResult` (joint + per-case Pareto frontiers,
+    per-cell summaries). `workload` picks the task family (see
+    `repro.workloads.list_workloads()`): "nerf" searches scene names,
+    "lm" searches LM arch ids (pass them via `scenes`). `hardware` is a
+    registered target name (see `repro.hero.list_targets()`) or a
+    `HardwareTarget` instance; None uses the workload's default.
     """
     from repro.core.closed_loop import ClosedLoopConfig, HeroSearchRun, SceneScale
+    from repro.workloads import get_workload
 
     if scale is None:
         scale = SceneScale.quick()
+    if hardware is None:
+        hardware = get_workload(workload).default_hardware
     hw_name = hardware if isinstance(hardware, str) else hardware.name
     cfg = ClosedLoopConfig(
         scenes=tuple(scenes),
@@ -60,6 +67,7 @@ def search(
         checkpoint_path=checkpoint_path,
         verbose=verbose,
         hardware=hw_name,
+        workload=workload,
     )
     run = HeroSearchRun(
         cfg, target=None if isinstance(hardware, str) else hardware

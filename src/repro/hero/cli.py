@@ -37,13 +37,25 @@ def search_main(argv=None) -> int:
         prog="hero-search",
         description="Closed-loop multi-scene HERO quantization search",
     )
-    ap.add_argument("--scenes", default="chair,lego",
-                    help="comma-separated procedural scenes")
+    from repro.workloads import list_workloads
+
+    ap.add_argument("--workload", default="nerf",
+                    choices=sorted(list_workloads()),
+                    help="registered task family the loop searches over: "
+                         "'nerf' scenes (default) or 'lm' arch ids")
+    ap.add_argument("--scenes", default=None,
+                    help="comma-separated cases: procedural scenes for "
+                         "--workload nerf (default chair,lego), arch ids "
+                         "for --workload lm (default qwen2-7b)")
+    ap.add_argument("--arch", default=None,
+                    help="shorthand for --scenes with a single LM arch id "
+                         "(--workload lm)")
     ap.add_argument("--budgets", default="1.0,0.85",
                     help="latency budgets as fractions of 8-bit latency")
-    ap.add_argument("--hardware", default="neurex",
+    ap.add_argument("--hardware", default=None,
                     choices=sorted(list_targets()),
-                    help="registered hardware target the search optimizes for")
+                    help="registered hardware target the search optimizes "
+                         "for (default: neurex for nerf, roofline-lm for lm)")
     ap.add_argument("--iterations", type=int, default=4,
                     help="population-search iterations per cell")
     ap.add_argument("--population", type=int, default=8,
@@ -71,15 +83,29 @@ def search_main(argv=None) -> int:
                          "and prove the recovery paths on this very config")
     args = ap.parse_args(argv)
 
+    if args.arch is not None:
+        if args.workload != "lm":
+            ap.error("--arch is shorthand for --workload lm")
+        if args.scenes is not None:
+            ap.error("pass either --arch or --scenes, not both")
+        args.scenes = args.arch
+    if args.scenes is None:
+        args.scenes = "qwen2-7b" if args.workload == "lm" else "chair,lego"
+    hardware = args.hardware or (
+        "roofline-lm" if args.workload == "lm" else "neurex"
+    )
+
     scenes = tuple(s for s in args.scenes.split(",") if s)
     budgets = tuple(float(b) for b in args.budgets.split(",") if b)
     scale = SceneScale.quick() if args.quick else SceneScale.standard()
     n_iter = min(args.iterations, 3) if args.quick else args.iterations
 
     n_dev = len(jax.devices())
-    print(f"[hero-search] {len(scenes)} scene(s) x {len(budgets)} budget(s), "
+    label = "scene" if args.workload == "nerf" else "arch"
+    print(f"[hero-search] workload={args.workload}: {len(scenes)} "
+          f"{label}(s) x {len(budgets)} budget(s), "
           f"{n_iter} iteration(s) x {args.population} policies per cell, "
-          f"target={args.hardware}, "
+          f"target={hardware}, "
           f"{n_dev} device(s){' (sharded)' if n_dev > 1 else ''}")
 
     cfg = ClosedLoopConfig(
@@ -89,7 +115,8 @@ def search_main(argv=None) -> int:
         scale=scale,
         n_iterations=n_iter,
         population=args.population,
-        hardware=args.hardware,
+        hardware=hardware,
+        workload=args.workload,
     )
     if args.checkpoint is None:
         # Key the default checkpoint on the config fingerprint: different
@@ -134,8 +161,8 @@ def search_main(argv=None) -> int:
         print(f"[hero-search] beat uniform "
               f"{result.fixed_bit_reference}-bit after "
               f"{result.seconds_to_fixed_bit:.1f}s of search")
-    print(f"\n  {'scene':8s} {'budget':>6s} {'lat ratio':>9s} "
-          f"{'dPSNR dB':>9s} {'size ratio':>10s}")
+    print(f"\n  {label:8s} {'budget':>6s} {'lat ratio':>9s} "
+          f"{'dQ dB':>9s} {'size ratio':>10s}")
     for p in sorted(result.frontier.points, key=lambda p: (p.scene, p.latency)):
         budget = f"{p.budget:g}" if p.budget is not None else "-"
         print(f"  {p.scene:8s} {budget:>6s} {p.latency:9.3f} "

@@ -14,6 +14,9 @@ consumes, plus the built-in targets and a by-name registry:
   roofline-edge  — an analytic bandwidth/compute roofline (RT-NeRF-style
                    on-device budget), NOT backed by the NeuRex machinery:
                    closed-form in the bit vectors, always shard-safe
+  roofline-lm    — weight-bound transformer decode roofline (TPU-v5e HBM
+                   stream): the LM workload's cost model. Not a renderer
+                   target; `repro.workloads.lm` consumes it
 
 A target provides four things: a workload builder (trace from real rays),
 a scalar `simulate` (one policy -> `LatencyBreakdown`), a `batched`
@@ -374,6 +377,142 @@ class RooflineTarget:
 
 
 # ---------------------------------------------------------------------------
+# LM decode roofline target (the LM workload's cost model)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LMRooflineHWConfig:
+    """Weight-bound autoregressive decode on an HBM-class chip.
+
+    At batch-1 decode every weight byte is streamed from HBM once per
+    token, so seconds/token = bytes(embed bands + per-layer weights) over
+    peak bandwidth. Activation bits shape quality, not this cost model
+    (their traffic is negligible next to the weight stream). Defaults are
+    the TPU v5e constants from `distributed.hlo_analysis.ChipSpec`.
+    """
+
+    chip: str = "tpu-v5e"
+    hbm_gbps: float = 819.0  # GB/s peak HBM bandwidth
+    peak_tflops_bf16: float = 197.0  # recorded identity; unused by the model
+
+    @property
+    def hbm_bw(self) -> float:
+        """B/s."""
+        return self.hbm_gbps * 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDecodeWorkload:
+    """Policy-independent constants of one arch's decode step (the LM
+    analogue of `NGPTrace`): embedding-band row counts and per-layer
+    weight-group element counts."""
+
+    arch: str
+    n_layers: int
+    d_model: int
+    band_rows: np.ndarray  # (n_bands,) f32 — vocab rows per embed band
+    group_elems: np.ndarray  # (N_GROUPS,) f32 — weight elems per group/layer
+
+
+def _lm_decode_metrics(
+    embed_bits: jnp.ndarray,  # (n_bands,)
+    w_bits: jnp.ndarray,  # (n_layers, N_GROUPS)
+    a_bits: jnp.ndarray,  # (n_layers, N_GROUPS) — quality-only
+    consts: LMDecodeWorkload,
+    hw: LMRooflineHWConfig,
+) -> Dict[str, jnp.ndarray]:
+    """Closed-form decode cost for ONE policy; pure in the bit arrays so
+    `jax.vmap` batches it and `shard_map` shards it. `total_cycles` is in
+    SECONDS per token — the closed loop only ever consumes latency as a
+    ratio to the same target's 8-bit baseline, so the unit cancels."""
+    band_rows = jnp.asarray(consts.band_rows, jnp.float32)
+    group = jnp.asarray(consts.group_elems, jnp.float32)
+    embed_bytes = jnp.sum(band_rows * float(consts.d_model) * embed_bits) / 8.0
+    w_bytes = jnp.sum(group[None, :] * w_bits) / 8.0
+    model_bytes = embed_bytes + w_bytes
+    seconds = model_bytes / hw.hbm_bw
+    # Every output must depend on every input so sharded outputs all carry
+    # the population axis (a_bits is cost-neutral by design).
+    zero = jnp.sum(a_bits) * 0.0
+    return {
+        "total_cycles": seconds + zero,
+        "seconds_per_token": seconds + zero,
+        "model_bytes": model_bytes + zero,
+        "dram_bytes": model_bytes + zero,
+    }
+
+
+class LMRooflineTarget:
+    """Weight-bound LM decode roofline as a `HardwareTarget`.
+
+    Same protocol shape as the renderer targets, different workload type:
+    `build_workload` takes a `repro.models.common.ModelConfig` and returns
+    `LMDecodeWorkload` consts; bit arrays are (embed_band, w, a) instead
+    of (hash, w, a). `repro.workloads.lm` is the intended consumer.
+    """
+
+    def __init__(self, hw: LMRooflineHWConfig = LMRooflineHWConfig(),
+                 name: str = "roofline-lm"):
+        self.name = name
+        self.hw = hw
+
+    def build_workload(self, model_cfg) -> LMDecodeWorkload:
+        from repro.models.lm import embed_band_boundaries, total_layers
+
+        cfg = model_cfg
+        bounds = embed_band_boundaries(cfg.vocab_size, cfg.n_embed_bands)
+        band_rows = np.diff(np.asarray(bounds, np.float64))
+        d, hd = cfg.d_model, cfg.head_dim
+        glu = cfg.ffn_type in ("swiglu", "geglu")
+        group_elems = np.asarray([
+            d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd,  # qkv
+            cfg.n_heads * hd * d,  # out proj
+            d * cfg.d_ff * (2 if glu else 1),  # ffn in (+gate)
+            cfg.d_ff * d,  # ffn out
+        ], np.float64)
+        return LMDecodeWorkload(
+            arch=cfg.name,
+            n_layers=total_layers(cfg),
+            d_model=d,
+            band_rows=band_rows.astype(np.float32),
+            group_elems=group_elems.astype(np.float32),
+        )
+
+    def simulate(self, workload: LMDecodeWorkload, embed_bits, w_bits,
+                 a_bits) -> Dict[str, float]:
+        r = _lm_decode_metrics(
+            jnp.asarray(embed_bits, jnp.float32),
+            jnp.asarray(w_bits, jnp.float32),
+            jnp.asarray(a_bits, jnp.float32),
+            workload, self.hw,
+        )
+        return {k: float(v) for k, v in r.items()}
+
+    def baseline(self, workload: LMDecodeWorkload,
+                 bits: int = 8) -> Dict[str, float]:
+        b = float(bits)
+        n_bands = len(workload.band_rows)
+        shape = (workload.n_layers, len(workload.group_elems))
+        return self.simulate(
+            workload, np.full(n_bands, b), np.full(shape, b),
+            np.full(shape, b),
+        )
+
+    def batched(self, workload: LMDecodeWorkload) -> BatchedHardwareSim:
+        hw = self.hw
+        return _RooflineBatched(
+            lambda eb, wb, ab: _lm_decode_metrics(eb, wb, ab, workload, hw)
+        )
+
+    def describe(self) -> Dict:
+        return {
+            "name": self.name,
+            "family": "roofline-lm",
+            "config": dataclasses.asdict(self.hw),
+            "kernel_autotune": kernel_autotune_key(),
+        }
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 _TARGET_REGISTRY: Dict[str, tuple] = {}  # name -> (factory, description)
@@ -477,4 +616,18 @@ register_target(
     "roofline-edge", _roofline_factory(RooflineHWConfig(), "roofline-edge"),
     "analytic bandwidth/compute roofline of an on-device renderer "
     "(non-NeuRex; always device-shardable)",
+)
+
+
+def _lm_roofline_factory(preset: LMRooflineHWConfig, name: str):
+    def factory(**kw) -> HardwareTarget:
+        return LMRooflineTarget(dataclasses.replace(preset, **kw), name=name)
+    return factory
+
+
+register_target(
+    "roofline-lm",
+    _lm_roofline_factory(LMRooflineHWConfig(), "roofline-lm"),
+    "weight-bound LM decode roofline (TPU v5e, 819 GB/s HBM stream of "
+    "embed-band + per-layer weight bytes; the --workload lm cost model)",
 )

@@ -1,0 +1,66 @@
+"""NeRF scene workload: the original HERO task behind the protocol.
+
+A pure adapter — `build_bundle` IS `repro.core.closed_loop
+.build_scene_bundle`, called with exactly the arguments the pre-protocol
+`HeroSearchRun.bundle` passed, so frontiers and checkpoint fingerprints
+are byte-identical to the sequential path (pinned by
+tests/test_workloads.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.workloads.base import PolicyShape, WorkloadBundle
+
+
+class NerfSceneWorkload:
+    kind = "nerf"
+    default_hardware = "neurex"
+
+    def policy_shape(self, case: str, scale: Any = None) -> PolicyShape:
+        """Unit layout without training a scene: the walk order is a pure
+        function of the NGP config the scale implies (hash levels
+        coarse->fine, then per-MLP-layer activation/weight pairs)."""
+        from repro.core.closed_loop import SceneScale
+        from repro.core.env import EnvConfig
+        from repro.nerf.hash_encoding import HashEncodingConfig
+        from repro.nerf.ngp import NGPConfig, make_quant_units
+
+        scale = scale if scale is not None else SceneScale()
+        cfg = NGPConfig(
+            hash=HashEncodingConfig(
+                n_levels=scale.n_levels, log2_table_size=scale.log2_table,
+                base_resolution=4, max_resolution=scale.max_res,
+            ),
+            hidden_dim=scale.hidden, color_hidden_dim=scale.hidden,
+            geo_feat_dim=15, sh_degree=3,
+        )
+        units = make_quant_units(cfg)
+        ecfg = EnvConfig()
+        return PolicyShape(
+            n_units=len(units), b_min=ecfg.b_min, b_max=ecfg.b_max,
+            labels=tuple(u.name for u in units),
+        )
+
+    def build_bundle(
+        self,
+        case: str,
+        *,
+        scale: Any = None,
+        seed: int = 0,
+        sharded: Optional[bool] = None,
+        hardware: Any = None,
+    ) -> WorkloadBundle:
+        from repro.core.closed_loop import SceneScale, build_scene_bundle
+
+        return build_scene_bundle(
+            case,
+            scale if scale is not None else SceneScale(),
+            seed=seed,
+            sharded=sharded,
+            hardware=hardware if hardware is not None
+            else self.default_hardware,
+        )
+
+    def describe(self) -> dict:
+        return {"kind": self.kind}
