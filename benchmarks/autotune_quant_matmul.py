@@ -7,6 +7,12 @@ key (`repro.kernels.autotune.backend_key()`). Entries for other backends
 are preserved — the table accumulates one list per backend, like the
 bench baselines accumulate one file per runner.
 
+Also measures the occupancy ray-march kernel's (br, bs, bt) grid over
+representative (rays, samples, resolution) shapes; those entries carry a
+``"kernel": "ray_march"`` tag in the same per-backend list.
+`--ray-march-only` / `--skip-ray-march` re-measure one family while
+preserving the other's committed entries.
+
 Run it whenever the kernel, the default shapes, or the runner changes:
 
   PYTHONPATH=src:. python benchmarks/autotune_quant_matmul.py
@@ -34,6 +40,15 @@ DEFAULT_SHAPES = (
 )
 DEFAULT_BITS = (2, 4, 8)
 
+# Representative (n_rays, n_samples, resolution) for the occupancy
+# ray-march kernel: the engine's slot shape (512 rays) and a full quick
+# view (32x32) at quick/standard sample counts, all on the g=32 grid.
+DEFAULT_RAY_MARCH_SHAPES = (
+    (512, 16, 32),
+    (1024, 16, 32),
+    (1024, 24, 32),
+)
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -43,6 +58,15 @@ def main(argv=None) -> int:
     ap.add_argument("--bits", default=None,
                     help="comma-separated packed bit widths (default 2,4,8)")
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--ray-march-shapes", default=None,
+                    help="comma-separated RxSxG list for the ray-march "
+                         "kernel (default: slot/view shapes on g=32)")
+    ap.add_argument("--ray-march-only", action="store_true",
+                    help="re-measure only the ray-march entries, "
+                         "preserving the backend's matmul entries")
+    ap.add_argument("--skip-ray-march", action="store_true",
+                    help="re-measure only the matmul entries, preserving "
+                         "the backend's ray-march entries")
     ap.add_argument("--out", default=None,
                     help="table path (default: the committed "
                          "src/repro/kernels/autotune_table.json)")
@@ -56,21 +80,44 @@ def main(argv=None) -> int:
     bits_list = DEFAULT_BITS
     if args.bits:
         bits_list = tuple(int(b) for b in args.bits.split(","))
+    rm_shapes = DEFAULT_RAY_MARCH_SHAPES
+    if args.ray_march_shapes:
+        rm_shapes = tuple(
+            tuple(int(d) for d in s.split("x"))
+            for s in args.ray_march_shapes.split(",")
+        )
 
     key = autotune.backend_key()
     table = dict(autotune.load_table(args.out))
     entries_by_key = dict(table.get("entries", {}))
+    old = list(entries_by_key.get(key, []))
     print(f"[autotune] measuring backend {key!r}: {len(shapes)} shapes x "
-          f"{len(bits_list)} bit widths, {args.repeats} repeats", flush=True)
+          f"{len(bits_list)} bit widths + {len(rm_shapes)} ray-march "
+          f"shapes, {args.repeats} repeats", flush=True)
 
-    entries = []
     t0 = time.perf_counter()
-    for m, k, n in shapes:
-        for bits in bits_list:
-            e = autotune.measure_entry(m, k, n, bits, repeats=args.repeats)
+    if args.ray_march_only:  # keep the backend's measured matmul entries
+        entries = [e for e in old if e.get("kernel") != "ray_march"]
+    else:
+        entries = []
+        for m, k, n in shapes:
+            for bits in bits_list:
+                e = autotune.measure_entry(m, k, n, bits,
+                                           repeats=args.repeats)
+                gain = e["default_ms"] / max(e["ms"], 1e-9)
+                print(f"  {m}x{k}x{n} b{bits}: best ({e['bm']},{e['bn']},"
+                      f"{e['bk']}) {e['ms']:.3f} ms  (default "
+                      f"{e['default_ms']:.3f} ms, {gain:.2f}x)", flush=True)
+                entries.append(e)
+    if args.skip_ray_march:  # keep the backend's measured ray-march entries
+        entries += [e for e in old if e.get("kernel") == "ray_march"]
+    else:
+        for r, s, g in rm_shapes:
+            e = autotune.measure_ray_march_entry(r, s, g,
+                                                 repeats=args.repeats)
             gain = e["default_ms"] / max(e["ms"], 1e-9)
-            print(f"  {m}x{k}x{n} b{bits}: best ({e['bm']},{e['bn']},"
-                  f"{e['bk']}) {e['ms']:.3f} ms  (default "
+            print(f"  ray_march {r}x{s} g{g}: best ({e['br']},{e['bs']},"
+                  f"{e['bt']}) {e['ms']:.3f} ms  (default "
                   f"{e['default_ms']:.3f} ms, {gain:.2f}x)", flush=True)
             entries.append(e)
     entries_by_key[key] = entries

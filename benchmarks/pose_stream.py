@@ -1,0 +1,422 @@
+"""Fresh-pose serve benchmark: the pose-grid plan cache under an ad-hoc
+camera stream.
+
+Compiles one quick scene and drives the `ServeEngine` with a stream of
+NEVER-SEEN orbit poses — the workload the pose fast path exists for.
+Three measurements:
+
+  * fresh    — every request is a new pose (0% cache hits): the Pallas
+               occupancy ray-march tier, timed against the SAME stream
+               through a `compaction="scatter"` engine (the legacy
+               cumsum+scatter strategy). The speedup is the tentpole's
+               headline number (gate: `--min-speedup`, default 1.3x).
+  * mixed    — a configurable `--hit-ratio` fraction of requests revisit
+               plan-baked poses (hit tier), the rest stay fresh; p50/p95
+               show the tiered latency profile.
+  * warm_hit — one pose repeated until every item is a cache hit, timed
+               against direct `_slot_plan_impl` calls on the engine's own
+               baked plans (fixed-ray CullPlan speed). The overhead ratio
+               gates engine bookkeeping out of the hot tier
+               (`--max-hit-overhead`, default 0.10).
+
+An untimed parity pass renders a held-out test view through every tier
+(march / hit / warp, plus the scatter reference) and pins the worst PSNR
+delta to the 1e-3 dB band — the tiers must be metrically invisible.
+
+The report merges into ``BENCH_serve.json`` under the ``"pose_stream"``
+key. With `--check-baseline`, fails (exit 1) when fresh-stream rays/sec
+drops more than `--max-drop` below the committed baseline
+(``benchmarks/BENCH_pose_baseline.json``) — after refusing cross-backend
+comparisons. The JSON is written BEFORE the gates fire.
+
+Usage (repo root on the path for `benchmarks.*`):
+  PYTHONPATH=src:. python benchmarks/pose_stream.py --quick
+  PYTHONPATH=src:. python benchmarks/pose_stream.py --quick \
+      --check-baseline benchmarks/BENCH_pose_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import refuse_backend_mismatch, runner_block
+
+PSNR_BAND_DB = 1e-3  # per-tier parity band vs the scatter reference
+
+
+def orbit_rays(theta: float, height: float, hw: int):
+    """Camera rays of one ad-hoc orbit pose (radius 2, looking inward)."""
+    import jax.numpy as jnp
+
+    from repro.nerf.scenes import camera_rays
+
+    c, s = np.cos(theta), np.sin(theta)
+    c2w = np.asarray(
+        [[c, 0.0, -s, 2.0 * s], [0.0, 1.0, 0.0, height], [s, 0.0, c, 2.0 * c]],
+        np.float32,
+    )
+    ro, rd = camera_rays(jnp.asarray(c2w), hw, hw * 1.2)
+    return np.asarray(ro).reshape(-1, 3), np.asarray(rd).reshape(-1, 3)
+
+
+def fresh_pose(rng: np.random.RandomState, hw: int):
+    """A never-repeating pose; the height stays off the pos-cell grid so
+    tiny jitters cannot straddle a quantization boundary."""
+    theta = float(rng.uniform(0.0, 2.0 * np.pi))
+    height = float(rng.uniform(0.06, 0.34))
+    return orbit_rays(theta, height, hw)
+
+
+def drive_stream(eng, scene: str, poses) -> dict:
+    """Submit+drain each pose as one request; engine-clock stats."""
+    eng.reset_stats()
+    rids = []
+    for ro, rd in poses:
+        rid = eng.submit(ro, rd, scene=scene)
+        eng.drain()
+        rids.append(rid)
+    stats = eng.stats()
+    colors = [eng.result(r) for r in rids]
+    return {"stats": stats, "colors": colors}
+
+
+def psnr_db(colors: np.ndarray, gt: np.ndarray) -> float:
+    se = float(((colors - gt) ** 2).mean())
+    return float(-10.0 * np.log10(max(se, 1e-12)))
+
+
+def tier_parity(eng_march, eng_scatter, scene: str, dataset) -> dict:
+    """Untimed: one held-out view through every tier; PSNR deltas vs the
+    scatter reference must sit inside the 1e-3 dB band."""
+    ro = np.asarray(dataset.test_rays_o[0], np.float32).reshape(-1, 3)
+    rd = np.asarray(dataset.test_rays_d[0], np.float32).reshape(-1, 3)
+    gt = np.asarray(dataset.test_rgb[0], np.float32).reshape(-1, 3)
+
+    ref = eng_scatter.render(ro, rd, scene=scene)
+    psnr_ref = psnr_db(ref, gt)
+
+    march = eng_march.render(ro, rd, scene=scene)  # first visit: march tier
+    eng_march.render(ro, rd, scene=scene)  # bakes the remaining plans
+    hit = eng_march.render(ro, rd, scene=scene)  # all items hit
+
+    # Warp tier: jitter within the pose cell (retrying signs/scales — a
+    # view can sit on a quantization boundary) and within the coverage
+    # margin; compare against the scatter render of the SAME jittered
+    # rays so the GT mismatch cancels.
+    stepper = eng_march._stepper
+    key0 = stepper.pose_key(scene, ro, rd)
+    warp_delta = None
+    for eps in (1e-4, -1e-4, 5e-5, -5e-5):
+        ro_j = ro + np.float32(eps)
+        if stepper.pose_key(scene, ro_j, rd) != key0:
+            continue
+        before = stepper.pose_stats()["warps"]
+        warp = eng_march.render(ro_j, rd, scene=scene)
+        if stepper.pose_stats()["warps"] == before:
+            continue  # deviated past the margin: marched instead
+        ref_j = eng_scatter.render(ro_j, rd, scene=scene)
+        warp_delta = abs(psnr_db(warp, gt) - psnr_db(ref_j, gt))
+        break
+
+    deltas = {
+        "march": abs(psnr_db(march, gt) - psnr_ref),
+        "hit": abs(psnr_db(hit, gt) - psnr_ref),
+        "warp": warp_delta,
+    }
+    return {
+        "psnr_reference_db": round(psnr_ref, 4),
+        "per_tier_delta_db": {
+            k: (None if v is None else round(v, 6)) for k, v in deltas.items()
+        },
+        "psnr_delta_db": round(
+            max(v for v in deltas.values() if v is not None), 6
+        ),
+        "warp_exercised": warp_delta is not None,
+    }
+
+
+def warm_hit_overhead(eng, scene: str, ro, rd, repeats: int) -> dict:
+    """Hit-tier device calls (the engine's baked WarpPlans) vs fixed-ray
+    `build_cull_plan` device calls on the SAME rays — both run the one
+    jitted plan impl, so the ratio isolates the plan content. The full
+    engine round-trip (scheduling, hashing, scatter) is reported as
+    context, not gated: at quick scale the render is sub-millisecond and
+    the Python loop dominates any engine."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.nerf.fast_render import _slot_plan_impl, build_cull_plan
+
+    R = eng.cfg.slot_rays
+    stepper = eng._stepper
+    art = eng._cache.ensure(scene).artifact
+    st = stepper._scene_state(scene, art)
+    key = stepper.pose_key(scene, ro, rd)
+    entry = stepper._pose_cache.get(key)
+    assert entry is not None and entry.plans, "warm phase baked no plans"
+
+    hit_slots, cull_slots = [], []
+    n = ro.shape[0]
+    for seq, s in enumerate(range(0, n, R)):
+        e = min(s + R, n)
+        ro_s = np.full((R, 3), 10.0, np.float32)
+        rd_s = np.zeros((R, 3), np.float32)
+        mask = np.zeros((R, 1), np.float32)
+        ro_s[: e - s], rd_s[: e - s], mask[: e - s] = ro[s:e], rd[s:e], 1.0
+        plan = build_cull_plan(
+            art.occ, ro_s[None], rd_s[None], mask[None], st["rcfg"], art.cfg
+        )
+        cull_row = (plan.buf_pts[0], plan.buf_dirs[0], plan.take[0],
+                    plan.valid[0], plan.hash_idx[0], plan.hash_w[0],
+                    plan.sh[0])
+        ro_j, rd_j = jnp.asarray(ro_s), jnp.asarray(rd_s)
+        hit_slots.append((ro_j, rd_j, entry.plans[seq].plan_row))
+        cull_slots.append((ro_j, rd_j, cull_row))
+    kw = dict(cfg=art.cfg, rcfg=st["rcfg"], mode="fused",
+              use_pallas=eng.cfg.use_pallas, early_stop=eng.cfg.early_stop)
+
+    def request(slots):
+        outs = [
+            _slot_plan_impl(art.params, art.pack, st["spec"], art.occ,
+                            ro_s, rd_s, plan_row, **kw)
+            for ro_s, rd_s, plan_row in slots
+        ]
+        jax.block_until_ready(outs)
+
+    def timed(slots):
+        request(slots)  # compile/warm outside the timed samples
+        samples = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            request(slots)
+            samples.append(time.perf_counter() - t0)
+        return float(np.median(samples))
+
+    hit_s = timed(hit_slots)
+    cull_s = timed(cull_slots)
+
+    eng.reset_stats()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        rid = eng.submit(ro, rd, scene=scene)
+        eng.drain()
+        eng.result(rid)
+    engine_s = (time.perf_counter() - t0) / repeats
+    stats = eng.stats()["pose_cache"]
+    assert stats["misses"] == 0 and stats["warps"] == 0, stats
+
+    return {
+        "repeats": repeats,
+        "hit_tier_ms_per_request": round(hit_s * 1e3, 3),
+        "cull_plan_ms_per_request": round(cull_s * 1e3, 3),
+        "overhead_ratio": round(hit_s / max(cull_s, 1e-9) - 1.0, 4),
+        "engine_ms_per_request": round(engine_s * 1e3, 3),
+        "rays_per_sec": round(ro.shape[0] / engine_s, 1),
+    }
+
+
+def run_pose_stream(
+    artifact, dataset, *, n_fresh: int, n_mixed: int, hit_ratio: float,
+    pool: int, hw: int, warm_repeats: int, seed: int,
+) -> dict:
+    from repro.hero.engine import ServeEngine
+    from repro.hero.scheduler import EngineConfig
+
+    scene = artifact.scene
+    eng = ServeEngine({scene: artifact}, EngineConfig())
+    eng_scatter = ServeEngine(
+        {scene: artifact}, EngineConfig(compaction="scatter")
+    )
+    rng = np.random.RandomState(seed)
+
+    # Compile every tier outside the timed regions.
+    ro_w, rd_w = fresh_pose(rng, hw)
+    for e in (eng, eng_scatter):
+        e.render(ro_w, rd_w, scene=scene)
+        e.render(ro_w, rd_w, scene=scene)
+        e.render(ro_w, rd_w, scene=scene)
+
+    # -- fresh stream: identical pose sequence through both strategies --
+    fresh_poses = [fresh_pose(rng, hw) for _ in range(n_fresh)]
+    fresh = drive_stream(eng, scene, fresh_poses)
+    scatter = drive_stream(eng_scatter, scene, fresh_poses)
+    for a, b in zip(fresh["colors"], scatter["colors"]):
+        np.testing.assert_array_equal(a, b)  # strategies are byte-identical
+    fresh_rps = fresh["stats"]["rays_per_sec"]
+    scatter_rps = scatter["stats"]["rays_per_sec"]
+
+    # -- mixed stream: hit_ratio of requests revisit plan-baked poses --
+    pool_poses = [fresh_pose(rng, hw) for _ in range(pool)]
+    for ro, rd in pool_poses:  # bake their plans (untimed warm phase)
+        eng.render(ro, rd, scene=scene)
+        eng.render(ro, rd, scene=scene)
+    mixed_poses = [
+        pool_poses[rng.randint(pool)]
+        if rng.uniform() < hit_ratio else fresh_pose(rng, hw)
+        for _ in range(n_mixed)
+    ]
+    mixed = drive_stream(eng, scene, mixed_poses)
+
+    # -- warm hits vs fixed-ray CullPlan speed -------------------------
+    warm = warm_hit_overhead(eng, scene, *pool_poses[0],
+                             repeats=warm_repeats)
+
+    parity = tier_parity(eng, eng_scatter, scene, dataset)
+
+    def stream_block(r):
+        s = r["stats"]
+        return {
+            "requests": s["requests_completed"],
+            "rays_per_sec": s["rays_per_sec"],
+            "latency_ms": s["latency_ms"],
+            "pose_cache": s["pose_cache"],
+        }
+
+    return {
+        "scene": scene,
+        "rays_per_pose": hw * hw,
+        "fresh": stream_block(fresh),
+        "scatter_baseline": stream_block(scatter),
+        "speedup_fresh": round(
+            float(fresh_rps) / max(float(scatter_rps), 1e-9), 3
+        ),
+        "mixed": dict(stream_block(mixed), hit_ratio=hit_ratio, pool=pool),
+        "warm_hit": warm,
+        "parity": parity,
+        "psnr_delta_db": parity["psnr_delta_db"],
+    }
+
+
+def check_baseline(report: dict, baseline_path: str, max_drop: float) -> bool:
+    base = json.loads(Path(baseline_path).read_text()).get("pose_stream")
+    if base is None:
+        print("[bench-pose] baseline has no 'pose_stream' entry; gate "
+              "skipped (refresh the committed baseline)")
+        return True
+    if not refuse_backend_mismatch(report, base, "bench-pose"):
+        return False
+    want = float(base["fresh"]["rays_per_sec"])
+    got = float(report["fresh"]["rays_per_sec"])
+    floor = want * (1.0 - max_drop)
+    ok = got >= floor
+    print(f"[bench-pose] regression gate: {got:,.0f} fresh rays/s vs "
+          f"baseline {want:,.0f} (floor {floor:,.0f}, max drop "
+          f"{max_drop:.0%}) -> {'OK' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--scene", default="chair")
+    ap.add_argument("--bits", type=int, default=8,
+                    help="uniform policy bit width to compile")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hw", type=int, default=32,
+                    help="pose image side (hw*hw rays per request)")
+    ap.add_argument("--n-fresh", type=int, default=None)
+    ap.add_argument("--n-mixed", type=int, default=None)
+    ap.add_argument("--hit-ratio", type=float, default=0.5,
+                    help="fraction of mixed-stream requests revisiting "
+                         "plan-baked poses")
+    ap.add_argument("--pool", type=int, default=3,
+                    help="plan-baked poses the mixed stream revisits")
+    ap.add_argument("--warm-repeats", type=int, default=None)
+    ap.add_argument("--min-speedup", type=float, default=1.3,
+                    help="fresh-stream floor vs the scatter baseline")
+    ap.add_argument("--max-hit-overhead", type=float, default=0.10,
+                    help="warm-hit engine overhead vs direct CullPlan "
+                         "renders")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="merged under the 'pose_stream' key of this JSON")
+    ap.add_argument("--check-baseline", default=None,
+                    help="baseline JSON to gate fresh rays/s against")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional fresh rays/s drop vs baseline")
+    args = ap.parse_args(argv)
+
+    from repro.core.closed_loop import SceneScale, build_scene_env
+    from repro.hero.artifact import compile_artifact
+
+    scale = SceneScale.quick() if args.quick else SceneScale.standard()
+    n_fresh = args.n_fresh or (6 if args.quick else 12)
+    n_mixed = args.n_mixed or (8 if args.quick else 16)
+    warm_repeats = args.warm_repeats or (5 if args.quick else 10)
+
+    print(f"[bench-pose] compiling scene={args.scene} (uniform "
+          f"{args.bits}-bit, {'quick' if args.quick else 'standard'} "
+          f"scale) ...", flush=True)
+    env = build_scene_env(args.scene, scale, seed=args.seed)
+    artifact = compile_artifact(env, [args.bits] * env.n_units)
+
+    report = run_pose_stream(
+        artifact, env.dataset,
+        n_fresh=n_fresh, n_mixed=n_mixed, hit_ratio=args.hit_ratio,
+        pool=args.pool, hw=args.hw, warm_repeats=warm_repeats,
+        seed=args.seed,
+    )
+    report["scale"] = "quick" if args.quick else "standard"
+    report["runner"] = runner_block()
+
+    out = Path(args.out)
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+            assert isinstance(merged, dict)
+        except (ValueError, AssertionError):
+            merged = {}
+    merged["pose_stream"] = report
+    out.write_text(json.dumps(merged, indent=2))
+
+    f, s, m, w = (report["fresh"], report["scatter_baseline"],
+                  report["mixed"], report["warm_hit"])
+    print(f"\n== pose stream (scene {report['scene']}, "
+          f"{report['rays_per_pose']} rays/pose) ==")
+    print(f"  fresh (0% hits):    {f['rays_per_sec']:,.0f} rays/s  "
+          f"p50={f['latency_ms']['p50']} p95={f['latency_ms']['p95']} ms")
+    print(f"  scatter baseline:   {s['rays_per_sec']:,.0f} rays/s  "
+          f"-> speedup {report['speedup_fresh']:.2f}x")
+    print(f"  mixed ({args.hit_ratio:.0%} hits):   "
+          f"{m['rays_per_sec']:,.0f} rays/s  "
+          f"p50={m['latency_ms']['p50']} p95={m['latency_ms']['p95']} ms  "
+          f"tiers={m['pose_cache']}")
+    print(f"  warm hit:           {w['rays_per_sec']:,.0f} rays/s  "
+          f"hit tier {w['hit_tier_ms_per_request']} ms vs CullPlan "
+          f"{w['cull_plan_ms_per_request']} ms "
+          f"({w['overhead_ratio']:+.1%}; engine loop "
+          f"{w['engine_ms_per_request']} ms)")
+    print(f"  PSNR parity:        worst tier delta "
+          f"{report['psnr_delta_db']:.6f} dB "
+          f"(warp exercised: {report['parity']['warp_exercised']})")
+    print(f"  wrote {args.out} (key 'pose_stream')")
+
+    ok = True
+    if report["psnr_delta_db"] > PSNR_BAND_DB:
+        print(f"[bench-pose] PSNR PARITY FAIL: {report['psnr_delta_db']:.6f} "
+              f"dB exceeds the {PSNR_BAND_DB} dB band", file=sys.stderr)
+        ok = False
+    if report["speedup_fresh"] < args.min_speedup:
+        print(f"[bench-pose] SPEEDUP FAIL: fresh stream "
+              f"{report['speedup_fresh']:.2f}x < {args.min_speedup}x the "
+              f"scatter baseline", file=sys.stderr)
+        ok = False
+    if w["overhead_ratio"] > args.max_hit_overhead:
+        print(f"[bench-pose] WARM-HIT OVERHEAD FAIL: "
+              f"{w['overhead_ratio']:.1%} > {args.max_hit_overhead:.0%} "
+              f"over fixed-ray CullPlan speed", file=sys.stderr)
+        ok = False
+    if args.check_baseline and not check_baseline(
+        report, args.check_baseline, args.max_drop
+    ):
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -101,6 +101,30 @@ def check_autotune(margin: float = 1.2, repeats: int = 5):
         return True, []
     ok, rows = True, []
     for e in entries:
+        if e.get("kernel") == "ray_march":
+            r, s, g = int(e["r"]), int(e["s"]), int(e["g"])
+            tuned_rm = (int(e["br"]), int(e["bs"]), int(e["bt"]))
+            t_ms = autotune.time_ray_march_block(r, s, g, tuned_rm,
+                                                 repeats=repeats)
+            d_ms = autotune.time_ray_march_block(
+                r, s, g, autotune.RAY_MARCH_DEFAULT, repeats=repeats
+            )
+            if t_ms > d_ms * margin:  # one retry absorbs scheduler noise
+                t_ms = min(t_ms, autotune.time_ray_march_block(
+                    r, s, g, tuned_rm, repeats=repeats))
+                d_ms = min(d_ms, autotune.time_ray_march_block(
+                    r, s, g, autotune.RAY_MARCH_DEFAULT, repeats=repeats))
+            loses = t_ms > d_ms * margin
+            ok = ok and not loses
+            rows.append({
+                "kernel": "ray_march", "r": r, "s": s, "g": g,
+                "tuned": list(tuned_rm), "tuned_ms": round(t_ms, 4),
+                "default_ms": round(d_ms, 4), "loses": loses,
+            })
+            print(f"[autotune] ray_march {r}x{s} g{g}: tuned {tuned_rm} "
+                  f"{t_ms:8.3f} ms vs default {d_ms:8.3f} ms "
+                  f"{'LOSES' if loses else 'ok'}")
+            continue
         m, k, n, bits = int(e["m"]), int(e["k"]), int(e["n"]), int(e["bits"])
         tuned = (int(e["bm"]), int(e["bn"]), int(e["bk"]))
         t_ms = autotune.time_block(m, k, n, bits, tuned, repeats=repeats)

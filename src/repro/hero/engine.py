@@ -81,12 +81,17 @@ class ArtifactCache:
         size_fn: Callable[[object], int],
         protected: Callable[[str], bool],
         on_event: Callable[[Tuple], None],
+        extra_bytes: Optional[Callable[[], int]] = None,
     ):
         self.cache_bytes = cache_bytes
         self._loader = loader
         self._size_fn = size_fn
         self._protected = protected
         self._event = on_event
+        # Non-artifact resident payload charged against the byte budget
+        # (the engine wires the pose-plan cache here, so plan bytes add
+        # eviction pressure like any other device-resident state).
+        self._extra_bytes = extra_bytes
         self._entries: "OrderedDict[str, CacheEntry]" = OrderedDict()
         self.loads = 0
         self.evictions = 0
@@ -97,7 +102,8 @@ class ArtifactCache:
     # ------------------------------------------------------------------
     @property
     def resident_bytes(self) -> int:
-        return sum(e.nbytes for e in self._entries.values())
+        extra = self._extra_bytes() if self._extra_bytes is not None else 0
+        return sum(e.nbytes for e in self._entries.values()) + extra
 
     def scenes(self) -> List[str]:
         return list(self._entries)
@@ -185,6 +191,19 @@ class FusedDeviceStep:
         self.cfg = cfg
         self._align = 128
         self._state: Dict[str, Dict] = {}
+        assert cfg.compaction in ("march", "scatter"), cfg.compaction
+        self._pose_cache = None
+        self._pose_grid = None
+        if cfg.pose_cache and cfg.compaction == "march":
+            from repro.nerf.pose_cache import PoseGridConfig, PosePlanCache
+
+            self._pose_grid = PoseGridConfig(
+                pos_cell=cfg.pose_pos_cell, dir_cell=cfg.pose_dir_cell,
+                margin_cells=cfg.pose_margin_cells,
+                entries=cfg.pose_cache_entries,
+                build_after=cfg.pose_build_after,
+            )
+            self._pose_cache = PosePlanCache(cfg.pose_cache_entries)
 
     # ------------------------------------------------------------------
     def _initial_budget(self, artifact, rcfg) -> Optional[int]:
@@ -244,8 +263,158 @@ class FusedDeviceStep:
             jnp.asarray(ro), jnp.asarray(rd),
             cfg=artifact.cfg, rcfg=st["rcfg"], mode="fused",
             budget=st["budget"], use_pallas=self.cfg.use_pallas,
-            early_stop=self.cfg.early_stop,
+            early_stop=self.cfg.early_stop, compaction=self.cfg.compaction,
         ))
+
+    # ------------------------------------------------------------------
+    # Pose-cache tiers (the `step_items` serve fast path)
+    # ------------------------------------------------------------------
+    def pose_key(self, scene: str, ro: np.ndarray, rd: np.ndarray):
+        """(scene,) + pose-grid cell of a request bundle, None when the
+        pose cache is disabled."""
+        if self._pose_cache is None or ro.shape[0] == 0:
+            return None
+        from repro.nerf.pose_cache import pose_cell_key
+
+        return (scene,) + pose_cell_key(
+            ro, rd, self._pose_grid.pos_cell, self._pose_grid.dir_cell
+        )
+
+    def note_pose_use(self, key) -> None:
+        """Count ONE visit of the pose cell (called once per submitted
+        request, not per item — `build_after` is in request visits, so a
+        never-revisited pose costs zero plan builds)."""
+        if self._pose_cache is not None and key is not None:
+            self._pose_cache.note_use(key)
+
+    def pin_pose(self, key) -> None:
+        if self._pose_cache is not None and key is not None:
+            self._pose_cache.pin(key)
+
+    def unpin_pose(self, key) -> None:
+        if self._pose_cache is not None and key is not None:
+            self._pose_cache.unpin(key)
+
+    def drop_scene_plans(self, scene: str) -> int:
+        """Artifact left the device -> its plans index nothing; drop them
+        (even pinned: the in-flight work re-loads and re-misses)."""
+        if self._pose_cache is None:
+            return 0
+        return self._pose_cache.drop_scene(scene)
+
+    def plan_bytes(self) -> int:
+        return self._pose_cache.nbytes if self._pose_cache is not None else 0
+
+    def pose_stats(self) -> Optional[Dict]:
+        return (
+            self._pose_cache.stats() if self._pose_cache is not None else None
+        )
+
+    def _march_slot(self, st, artifact, ro_s, rd_s) -> np.ndarray:
+        """Cache-miss tier for one padded slot, with grow-on-overflow:
+        the march impl returns the TRUE device active count, so an
+        overflowing slot grows the budget (one retrace) and re-renders —
+        no silently dropped samples, no host-side mask pass per step."""
+        from repro.nerf.fast_render import _slot_march_impl
+
+        while True:
+            color, need = _slot_march_impl(
+                artifact.params, artifact.pack, st["spec"], artifact.occ,
+                ro_s, rd_s, cfg=artifact.cfg, rcfg=st["rcfg"], mode="fused",
+                budget=st["budget"], use_pallas=self.cfg.use_pallas,
+                early_stop=self.cfg.early_stop,
+            )
+            if st["budget"] is None or int(need) <= st["budget"]:
+                return np.asarray(color)
+            need = int(need)
+            cap = self.cfg.slot_rays * st["rcfg"].n_samples
+            grown = int(
+                np.ceil(max(need * self.cfg.budget_headroom, need)
+                        / self._align) * self._align
+            )
+            st["budget"] = min(grown, cap)
+            st["retraces"] += 1
+
+    def step_items(
+        self, scene: str, artifact, items: List[WorkItem],
+        ro: np.ndarray, rd: np.ndarray,
+    ) -> np.ndarray:
+        """Tiered per-slot render of one padded bucket.
+
+        Each live slot resolves to cache-hit (rays fingerprint-match the
+        cell's baked plan), warp (pose deviates within the plan's
+        conservative coverage margin), or march (miss; the cell's use
+        count decides whether to bake a plan for next time). Every tier
+        runs at the same fixed (slot_rays, 3) padded shape, so mixing
+        tiers within a bucket never retraces anything.
+        """
+        import jax.numpy as jnp
+
+        from repro.nerf.fast_render import _slot_plan_impl, _slot_warp_impl
+
+        if self.cfg.compaction != "march":
+            # Legacy scatter strategy has no tiers: one padded-bucket call.
+            return np.asarray(self(scene, artifact, ro, rd))
+        st = self._scene_state(scene, artifact)
+        S = ro.shape[0]
+        colors = np.zeros((S, ro.shape[1], 3), np.float32)
+        kw = dict(
+            cfg=artifact.cfg, rcfg=st["rcfg"], mode="fused",
+            use_pallas=self.cfg.use_pallas, early_stop=self.cfg.early_stop,
+        )
+        cache = self._pose_cache
+        for slot, it in enumerate(items):
+            ro_s, rd_s = jnp.asarray(ro[slot]), jnp.asarray(rd[slot])
+            key = getattr(it, "pose_key", None)
+            entry = plan = None
+            tier = "march"
+            if cache is not None and key is not None:
+                from repro.nerf import pose_cache as pc
+
+                # Visits were counted at submit; a cell dropped between
+                # submit and step (scene eviction) restarts at one use.
+                entry = cache.get(key)
+                if entry is None:
+                    entry = cache.note_use(key)
+                plan = entry.plans.get(it.seq)
+                if plan is not None:
+                    if pc.ray_fingerprint(ro[slot], rd[slot]) == plan.fp:
+                        tier = "hit"
+                    elif pc.warp_deviation(
+                        ro[slot], rd[slot], plan.ref_o, plan.ref_d,
+                        st["rcfg"],
+                    ) <= plan.margin:
+                        tier = "warp"
+                    else:
+                        plan = None  # drifted out of coverage: rebuild
+            if tier == "hit":
+                cache.hits += 1
+                colors[slot] = np.asarray(_slot_plan_impl(
+                    artifact.params, artifact.pack, st["spec"],
+                    artifact.occ, ro_s, rd_s, plan.plan_row, **kw,
+                ))
+            elif tier == "warp":
+                cache.warps += 1
+                colors[slot] = np.asarray(_slot_warp_impl(
+                    artifact.params, artifact.pack, st["spec"],
+                    artifact.occ, ro_s, rd_s, plan.inv_take, plan.take,
+                    plan.valid_cons, **kw,
+                ))
+            else:
+                if cache is not None and key is not None:
+                    cache.misses += 1
+                colors[slot] = self._march_slot(st, artifact, ro_s, rd_s)
+                if (
+                    entry is not None
+                    and entry.uses >= self._pose_grid.build_after
+                ):
+                    from repro.nerf import pose_cache as pc
+
+                    cache.put_plan(key, it.seq, pc.build_warp_plan(
+                        artifact.occ, ro[slot], rd[slot], st["rcfg"],
+                        artifact.cfg, self._pose_grid.margin(artifact.occ),
+                    ))
+        return colors
 
     # ------------------------------------------------------------------
     def budgets(self) -> Dict[str, Optional[int]]:
@@ -258,6 +427,9 @@ class FusedDeviceStep:
     def reset_stats(self) -> None:
         for st in self._state.values():
             st["retraces"] = 0
+        if self._pose_cache is not None:
+            c = self._pose_cache
+            c.hits = c.warps = c.misses = c.builds = c.evictions = 0
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +461,10 @@ class ServeEngine:
             size_fn if size_fn is not None else _default_size_fn,
             protected=lambda scene: self._sched.pending(scene) > 0,
             on_event=self._event,
+            extra_bytes=(
+                self._stepper.plan_bytes if self._stepper is not None
+                else None
+            ),
         )
         for scene, artifact in self._as_scene_map(artifacts).items():
             self._cache.add(scene, artifact)
@@ -320,6 +496,11 @@ class ServeEngine:
         return {artifacts.scene: artifacts}
 
     def _event(self, ev: Tuple) -> None:
+        # Evicting a scene's artifact invalidates its pose plans (they
+        # index device state that just left) — unconditional, not only
+        # when event tracing is on.
+        if ev and ev[0] == "evict" and self._stepper is not None:
+            self._stepper.drop_scene_plans(ev[1])
         if self._events is not None:
             self._events.append(ev)
 
@@ -421,6 +602,12 @@ class ServeEngine:
         self._requests_submitted += 1
         if self._t_first_submit is None:
             self._t_first_submit = now
+        pose_key = (
+            self._stepper.pose_key(scene, ro, rd)
+            if self._stepper is not None else None
+        )
+        if self._stepper is not None:
+            self._stepper.note_pose_use(pose_key)
         for i in range(n_items):
             s = i * R
             e = min(s + R, n_rays) if n_rays else 0
@@ -428,7 +615,12 @@ class ServeEngine:
                 rid=rid, scene=scene, seq=i, start=s, stop=e,
                 rays_o=ro[s:e], rays_d=rd[s:e],
                 order=self._sched.next_order(), t_enqueue=now,
+                pose_key=pose_key,
             ))
+            # Pin per item: the pose cell stays un-evictable while ANY of
+            # the request's items is in flight (unpinned on render/drop).
+            if self._stepper is not None:
+                self._stepper.pin_pose(pose_key)
         self._event(("submit", rid, scene, n_items))
         return rid
 
@@ -446,6 +638,8 @@ class ServeEngine:
     def _drop_item(self, it: WorkItem, now: float) -> None:
         self._items_dropped += 1
         self._rays_dropped += it.stop - it.start
+        if self._stepper is not None:
+            self._stepper.unpin_pose(it.pose_key)
         self._event(("drop", it.rid, it.seq))
         req = self._requests.get(it.rid)
         if req is None:
@@ -501,7 +695,14 @@ class ServeEngine:
             ro[slot, :n] = it.rays_o
             rd[slot, :n] = it.rays_d
 
-        colors = np.asarray(self._device_step(scene, entry.artifact, ro, rd))
+        # The fused stepper's item-aware entry routes each slot through
+        # the pose-cache tiers (hit/warp/march); injected 4-arg fakes
+        # keep the plain padded-bucket protocol.
+        step_items = getattr(self._device_step, "step_items", None)
+        if step_items is not None:
+            colors = np.asarray(step_items(scene, entry.artifact, items, ro, rd))
+        else:
+            colors = np.asarray(self._device_step(scene, entry.artifact, ro, rd))
         assert colors.shape == (S, R, 3), colors.shape
         self._steps += 1
         self._event(
@@ -510,6 +711,8 @@ class ServeEngine:
 
         now = self._clock()
         for slot, it in enumerate(items):
+            if self._stepper is not None:
+                self._stepper.unpin_pose(it.pose_key)
             req = self._requests[it.rid]
             n = it.stop - it.start
             req.colors[it.start:it.stop] = colors[slot, :n]
@@ -693,6 +896,10 @@ class ServeEngine:
             },
             "slots": self.cfg.slots,
             "slot_rays": self.cfg.slot_rays,
+            "pose_cache": (
+                self._stepper.pose_stats()
+                if self._stepper is not None else None
+            ),
         }
 
 

@@ -78,6 +78,22 @@ class EngineConfig:
     # submit() that would exceed it raises AdmissionFull (and counts in
     # the `rejected` stat). None = unbounded (the historical behavior).
     max_pending: Optional[int] = None
+    # Ad-hoc compaction strategy of the fused stepper: "march" (default;
+    # the Pallas occupancy ray-march active mask + gather compaction) or
+    # "scatter" (the legacy cumsum+scatter path — byte-identical colors,
+    # kept as the benchmark baseline and an escape hatch). "scatter"
+    # disables the pose-cache tiers.
+    compaction: str = "march"
+    # Pose-grid plan cache (`repro.nerf.pose_cache`): ad-hoc requests are
+    # keyed to a quantized pose cell; repeat cells get compiled cull
+    # plans (hit tier) and nearby poses reuse them conservatively (warp
+    # tier). Ignored by injected device-step functions.
+    pose_cache: bool = True
+    pose_pos_cell: float = 0.05  # world units per position cell
+    pose_dir_cell: float = 0.05  # direction units per orientation cell
+    pose_margin_cells: float = 1.0  # warp coverage margin, in occ cells
+    pose_cache_entries: int = 128  # LRU capacity (pose cells)
+    pose_build_after: int = 2  # bake plans on the Nth request visit of a cell
 
 
 @dataclasses.dataclass
@@ -93,6 +109,9 @@ class WorkItem:
     rays_d: np.ndarray
     order: int  # global enqueue order — the scheduler's age key
     t_enqueue: float
+    # Pose-grid cell of the request's bundle ((scene,) + cell tuple),
+    # None when the pose cache is off or the stepper doesn't support it.
+    pose_key: Optional[tuple] = None
 
 
 @dataclasses.dataclass

@@ -95,6 +95,9 @@ def lookup_block(
     entries = (table or load_table()).get("entries", {}).get(
         key or backend_key(), []
     )
+    # Matmul entries are untagged; other kernels' entries carry a
+    # "kernel" tag and live in the same per-backend list.
+    entries = [e for e in entries if "kernel" not in e]
     if fixed_bk is not None:
         entries = [e for e in entries if int(e["bk"]) == int(fixed_bk)]
     if not entries:
@@ -199,6 +202,123 @@ def default_candidates(m: int, k: int, n: int) -> List[Tuple[int, int, int]]:
             for bk in clip((128, 256), k):
                 cands.append((bm, bn, bk))
     return cands
+
+
+# ---------------------------------------------------------------------------
+# Ray-march kernel: (br, bs, bt) blocks, same table / same policy
+# ---------------------------------------------------------------------------
+# Entries share the per-backend list with the matmul entries but carry
+# `"kernel": "ray_march"` plus {r, s, g, br, bs, bt, ms, default_ms};
+# `lookup_block` above filters them out, and `lookup_ray_march` only sees
+# them. Block choice never changes numerics (the march is an exact
+# {0,1} mask), only speed.
+
+RAY_MARCH_DEFAULT: Tuple[int, int, int] = (128, 8, 512)
+
+
+def _ray_march_entries(table: Optional[dict], key: Optional[str]) -> list:
+    entries = (table or load_table()).get("entries", {}).get(
+        key or backend_key(), []
+    )
+    return [e for e in entries if e.get("kernel") == "ray_march"]
+
+
+def lookup_ray_march(
+    n_rays: int,
+    n_samples: int,
+    resolution: int,
+    *,
+    table: Optional[dict] = None,
+    key: Optional[str] = None,
+) -> Tuple[int, int, int]:
+    """(br, bs, bt) for an (n_rays, n_samples) march over a resolution^3
+    grid: nearest measured entry in log-shape space, or the fixed
+    default when this backend has no measurements."""
+    entries = _ray_march_entries(table, key)
+    if not entries:
+        return RAY_MARCH_DEFAULT
+
+    def score(e):
+        d = 0.0
+        for k_, v in (("r", n_rays), ("s", n_samples), ("g", resolution)):
+            d += abs(math.log(max(v, 1) / max(int(e[k_]), 1)))
+        return d
+
+    best = min(entries, key=score)
+    return (int(best["br"]), int(best["bs"]), int(best["bt"]))
+
+
+def _ray_march_operands(r: int, s: int, g: int, seed: int):
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(seed)
+    occ = jnp.asarray((rng.rand(g, g, g) < 0.3).astype(np.float32))
+    ro = jnp.asarray(rng.randn(r, 3).astype(np.float32) * 0.5)
+    rd = rng.randn(r, 3).astype(np.float32)
+    rd = jnp.asarray(rd / np.linalg.norm(rd, axis=1, keepdims=True))
+    t = jnp.asarray(np.linspace(0.05, 2.5, s, dtype=np.float32))
+    return occ, ro, rd, t
+
+
+def time_ray_march_block(
+    r: int,
+    s: int,
+    g: int,
+    block: Tuple[int, int, int],
+    repeats: int = 5,
+    seed: int = 0,
+) -> float:
+    """Measured ms/call of the march kernel for one (br, bs, bt) on the
+    operand recipe shared with `measure_ray_march_entry` — the
+    never-loses gate replays tuned-vs-default with this."""
+    from repro.kernels.ray_march import ray_march
+
+    occ, ro, rd, t = _ray_march_operands(r, s, g, seed)
+    br, bs, bt = block
+
+    def run():
+        ray_march(occ, ro, rd, t, br=br, bs=bs, bt=bt).block_until_ready()
+
+    return _time_call(run, repeats)
+
+
+def measure_ray_march_entry(
+    r: int,
+    s: int,
+    g: int,
+    candidates: Optional[List[Tuple[int, int, int]]] = None,
+    repeats: int = 5,
+    seed: int = 0,
+) -> dict:
+    """Measure candidate blocks for one (rays, samples, resolution) march
+    and return the winning tagged table entry."""
+    if candidates is None:
+        candidates = ray_march_candidates(r, s, g)
+    timed = {}
+    for cand in candidates:
+        timed[tuple(cand)] = time_ray_march_block(r, s, g, cand, repeats, seed)
+    if RAY_MARCH_DEFAULT not in timed:
+        timed[RAY_MARCH_DEFAULT] = time_ray_march_block(
+            r, s, g, RAY_MARCH_DEFAULT, repeats, seed
+        )
+    best = min(timed, key=timed.get)
+    return {
+        "kernel": "ray_march", "r": r, "s": s, "g": g,
+        "br": best[0], "bs": best[1], "bt": best[2],
+        "ms": round(timed[best], 4),
+        "default_ms": round(timed[RAY_MARCH_DEFAULT], 4),
+    }
+
+
+def ray_march_candidates(r: int, s: int, g: int) -> List[Tuple[int, int, int]]:
+    """Small candidate grid clipped to the padded problem."""
+    rp = -(-max(r, 1) // 128) * 128
+    brs = sorted({min(o, rp) for o in (128, 256, 512)})
+    bss = sorted({min(o, s) for o in (4, 8, 16) if o <= max(s, 4)} or {4})
+    gp = g * g
+    bts = sorted({min(o, gp) for o in (256, 512, 1024)})
+    return [(br, bs, bt) for br in brs for bs in bss for bt in bts]
 
 
 def save_table(entries_by_key: Dict[str, list],

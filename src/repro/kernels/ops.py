@@ -30,6 +30,7 @@ from repro.kernels.quant_matmul import (
     quant_matmul as _qmm_pallas,
     quant_matmul_packed as _qmm_packed_pallas,
 )
+from repro.kernels.ray_march import ray_march as _ray_march_pallas
 from repro.quant.packing import tile_layout_bk as _tile_layout_bk
 
 
@@ -143,6 +144,27 @@ def alpha_composite(sigma, rgb, delta, use_pallas="auto", **kw):
         return ref.alpha_composite_ref(sigma, rgb, delta)
     return _alpha_pallas(
         sigma, rgb, delta, interpret=interpret and not _on_tpu(), **kw
+    )
+
+
+def ray_march(occ, rays_o, rays_d, t, use_pallas="auto", **kw):
+    """Active-sample mask (R, S) f32 {0,1} from marching the occupancy
+    grid — exactly `ref.ray_march_ref` (and `occupancy_lookup` on the
+    renderer's sample points); the block choice never changes the mask.
+    `t` must be non-decreasing for `early_stop=True` (the default);
+    missing br/bs/bt come from the measured autotune table."""
+    run, interpret = _resolve(use_pallas)
+    if not run:
+        return ref.ray_march_ref(occ, rays_o, rays_d, t)
+    if not all(b in kw for b in ("br", "bs", "bt")):
+        br, bs, bt = _autotune.lookup_ray_march(
+            rays_o.shape[0], t.shape[0], occ.shape[0]
+        )
+        kw.setdefault("br", br)
+        kw.setdefault("bs", bs)
+        kw.setdefault("bt", bt)
+    return _ray_march_pallas(
+        occ, rays_o, rays_d, t, interpret=interpret and not _on_tpu(), **kw
     )
 
 

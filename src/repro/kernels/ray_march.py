@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: occupancy-grid ray march for ad-hoc rays.
+
+The CUDA reference (RT-NeRF / Instant-NGP style) walks each ray through
+the occupancy grid with a DDA loop and stops at the box exit. TPU
+adaptation, same shape as `alpha_composite`: rays are the vector
+dimension (blocks of `br` lanes), samples are walked by a SEQUENTIAL
+grid axis in chunks of `bs`, and the per-ray analytic box-exit t (slab
+test, computed once at s == 0 into a VMEM scratch) drives whole-chunk
+early termination — once every ray in the block has exited the scene
+box, the remaining sample chunks are skipped via a carried done flag
+(`pl.when`), writing exact zeros (a skipped sample is provably outside
+the box, so skipping never changes the result, unlike the composite
+kernel's t_eps tolerance).
+
+The per-sample occupancy lookup is a gather with data-dependent indices;
+TPUs have no per-lane random gather, so (hash_encoding_kernel's trick)
+it is re-expressed as one-hot MXU matmuls: the (G, G, G) grid is viewed
+as (G*G, G) rows, a sample one-hot selects its (x, y) row against table
+chunks of `bt` rows (accumulated over a fori_loop so the one-hot never
+exceeds (br, bs, bt) in VMEM), and a second one-hot over the row's G
+z-entries selects the cell value.
+
+Semantics are EXACTLY `repro.kernels.ref.ray_march_ref` — a sample at
+o + d * t is active iff strictly inside the [-0.5, 0.5)^3 box and in an
+occupied cell — which is itself exactly `occupancy_lookup` on the
+renderer's sample points; the parity tests pin bit-equality. `t` must be
+non-decreasing (the deterministic eval samples from
+`occupancy.ray_t_samples` are), or early termination is disabled by the
+wrapper's `early_stop=False`.
+
+Prefer `repro.kernels.ops.ray_march` (the canonical entry): it adds the
+pure-jnp reference fallback and the autotuned block sizes. This raw
+entry auto-detects `interpret` (compiled on TPU, interpret-mode
+elsewhere) when left at None.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
+
+_BIG = 3.0e38  # "never exits" sentinel, comfortably below f32 inf
+
+
+def _ray_march_kernel(t_ref, ro_ref, rd_ref, occ_ref, out_ref,
+                      texit_ref, done_ref, *, g, bt, n_t, early_stop):
+    """Block: (br rays, bs samples). Grid axis 1 walks sample chunks."""
+    s = pl.program_id(1)
+    o = ro_ref[...]  # (br, 3)
+    d = rd_ref[...]
+
+    @pl.when(s == 0)
+    def _init():
+        # Slab test: conservative per-ray box-exit t. Any t strictly
+        # beyond it has the point outside [-0.5, 0.5]^3 on some axis.
+        # Degenerate axes (d ~ 0): the axis never bounds the ray when the
+        # origin coordinate is inside, and the ray never enters at all
+        # when it is outside.
+        safe = jnp.abs(d) > 1e-12
+        inv = 1.0 / jnp.where(safe, d, 1.0)
+        t1 = (-0.5 - o) * inv
+        t2 = (0.5 - o) * inv
+        per_axis = jnp.where(
+            safe, jnp.maximum(t1, t2),
+            jnp.where(jnp.abs(o) < 0.5, _BIG, -_BIG),
+        )
+        texit_ref[...] = jnp.min(per_axis, axis=1, keepdims=True)  # (br, 1)
+        done_ref[...] = jnp.zeros_like(done_ref)
+
+    def _step():
+        t = t_ref[...]  # (1, bs)
+        pts = o[:, None, :] + d[:, None, :] * t[0, :, None]  # (br, bs, 3)
+        inside = jnp.all((pts > -0.5) & (pts < 0.5), axis=-1)  # (br, bs)
+        unit = jnp.clip(pts + 0.5, 0.0, 1.0)
+        cell = jnp.clip((unit * g).astype(jnp.int32), 0, g - 1)
+        row = cell[..., 0] * g + cell[..., 1]  # (br, bs) in [0, G*G)
+        iz = cell[..., 2]
+
+        def gather_rows(c, acc):
+            # One-hot "gather" of each sample's (x, y) grid row: (br, bs,
+            # bt) x (bt, G) contraction, accumulated over table chunks.
+            rows = occ_ref[pl.ds(c * bt, bt), :]  # (bt, G)
+            local = row - c * bt
+            cols = jax.lax.broadcasted_iota(
+                jnp.int32, row.shape + (bt,), 2
+            )
+            onehot = (cols == local[:, :, None]).astype(jnp.float32)
+            return acc + jax.lax.dot_general(
+                onehot, rows, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+        acc = jax.lax.fori_loop(
+            0, n_t, gather_rows,
+            jnp.zeros(row.shape + (g,), jnp.float32),
+        )  # (br, bs, G): each sample's full z-row
+        zcols = jax.lax.broadcasted_iota(jnp.int32, row.shape + (g,), 2)
+        val = jnp.sum(
+            acc * (zcols == iz[:, :, None]).astype(jnp.float32), axis=2
+        )
+        out_ref[...] = (inside & (val > 0.5)).astype(jnp.float32)
+        if early_stop:
+            # t is non-decreasing: once this chunk's last sample sits
+            # strictly past EVERY ray's box exit, all later samples are
+            # outside -> later chunks write exact zeros.
+            done_ref[...] = (
+                (t[0, -1] > jnp.max(texit_ref[...]))
+                .astype(jnp.float32).reshape(1, 1)
+            )
+
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    if early_stop:
+        # Read the flag ONCE before branching: _step updates done_ref for
+        # the NEXT chunk, and a second ref read after it would see the new
+        # value and let _skip clobber the boundary chunk just computed.
+        live = done_ref[0, 0] == 0.0
+        pl.when(live)(_step)
+        pl.when(jnp.logical_not(live))(_skip)
+    else:
+        _step()
+
+
+@functools.partial(
+    jax.jit, static_argnames=("br", "bs", "bt", "interpret", "early_stop")
+)
+def ray_march(
+    occ: jnp.ndarray,  # (G, G, G) f32 {0, 1} occupancy
+    rays_o: jnp.ndarray,  # (R, 3)
+    rays_d: jnp.ndarray,  # (R, 3)
+    t: jnp.ndarray,  # (S,) f32 sample depths, non-decreasing
+    br: int = 128,
+    bs: int = 8,
+    bt: int = 512,
+    interpret: Optional[bool] = None,
+    early_stop: bool = True,
+) -> jnp.ndarray:
+    """Returns active (R, S) f32 {0, 1} — see `ref.ray_march_ref`."""
+    interpret = resolve_interpret(interpret)
+    g = occ.shape[0]
+    occ2d = occ.reshape(g * g, g)
+    pt = (-(g * g)) % bt
+    occ2d = jnp.pad(occ2d, ((0, pt), (0, 0)))
+    n_t = (g * g + pt) // bt
+
+    R, S = rays_o.shape[0], t.shape[0]
+    pr, ps = (-R) % br, (-S) % bs
+    # Ray padding originates far outside the box with zero direction: the
+    # slab test gives it texit = -BIG (it never bounds the block's early
+    # exit) and every sample lands outside -> exact zero rows. Sample
+    # padding uses a huge t: outside the box AND past every exit.
+    ro = jnp.pad(rays_o, ((0, pr), (0, 0)), constant_values=10.0)
+    rd = jnp.pad(rays_d, ((0, pr), (0, 0)))
+    tt = jnp.pad(t, (0, ps), constant_values=1e9).reshape(1, -1)
+    Rp, Sp = R + pr, S + ps
+
+    out = pl.pallas_call(
+        functools.partial(
+            _ray_march_kernel, g=g, bt=bt, n_t=n_t, early_stop=early_stop
+        ),
+        grid=(Rp // br, Sp // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda r, s: (0, s)),
+            pl.BlockSpec((br, 3), lambda r, s: (r, 0)),
+            pl.BlockSpec((br, 3), lambda r, s: (r, 0)),
+            pl.BlockSpec((g * g + pt, g), lambda r, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bs), lambda r, s: (r, s)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Sp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((br, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tt, ro, rd, occ2d)
+    return out[:R, :S]

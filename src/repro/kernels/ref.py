@@ -42,6 +42,24 @@ def hash_gather_ref(indices, table):
     return table[indices].astype(jnp.float32)
 
 
+def ray_march_ref(occ, rays_o, rays_d, t):
+    """Occupancy march oracle: active (R, S) f32 {0,1}.
+
+    occ (G,G,G) f32 {0,1}; rays_o/rays_d (R,3); t (S,) f32 sample depths.
+    A sample is active iff its point o + d*t lies strictly inside the
+    [-0.5, 0.5)^3 scene box AND in an occupied cell of the unit-cube
+    grid — exactly the semantics of `occupancy_lookup` on the renderer's
+    sample points (the fused cull paths assume bit-equality with this).
+    """
+    G = occ.shape[0]
+    pts = rays_o[:, None, :] + rays_d[:, None, :] * t[None, :, None]
+    inside = jnp.all((pts > -0.5) & (pts < 0.5), axis=-1)  # (R, S)
+    unit = jnp.clip(pts + 0.5, 0.0, 1.0)
+    cell = jnp.clip((unit * G).astype(jnp.int32), 0, G - 1)
+    hit = occ[cell[..., 0], cell[..., 1], cell[..., 2]] > 0.5
+    return (inside & hit).astype(jnp.float32)
+
+
 def decode_attention_ref(q, k, v, length):
     """q (B,Hkv,G,hd); k/v (B,Hkv,S,hd); masked softmax over S."""
     B, Hkv, G, hd = q.shape

@@ -65,6 +65,7 @@ from repro.kernels.ops import (
     hash_encode as ops_hash_encode,
     hash_gather as ops_hash_gather,
     quant_matmul_packed as ops_quant_matmul_packed,
+    ray_march as ops_ray_march,
 )
 from repro.kernels.repack import DEFAULT_TILE_BK, repack_tile_native
 from repro.nerf.hash_encoding import level_corner_data
@@ -80,6 +81,7 @@ from repro.nerf.occupancy import (
     OccupancyGrid,
     cull_budget,
     occupancy_lookup,
+    ray_t_samples,
     sample_active_mask,
 )
 from repro.quant.linear_quant import (
@@ -534,13 +536,22 @@ def build_cull_plan(
 def _chunk_color(
     params, pack, spec, occ, rays_o, rays_d,
     cfg, rcfg, mode, budget, use_pallas, early_stop,
-    key=None, plan_row=None,
+    key=None, plan_row=None, compaction="march",
 ):
-    """Core renderer for one chunk of rays. Returns (color (R,3), acc (R,1))."""
+    """Core renderer for one chunk of rays. Returns (color (R,3), acc (R,1)).
+
+    `compaction` picks the ad-hoc-ray strategy: "march" (default) gets the
+    active mask from the occupancy ray-march kernel and compacts with a
+    `nonzero`-gather; "scatter" is the legacy cumsum+scatter path, kept as
+    the benchmark baseline and the byte-identity pin for "march".
+    """
     n_rays = rays_o.shape[0]
     n_s = rcfg.n_samples
-    t = jnp.linspace(rcfg.near, rcfg.far, n_s)
-    t = jnp.broadcast_to(t, (n_rays, n_s))
+    # Staged as a jit constant from the SAME host linspace the plan/budget
+    # oracles use -> host-baked plans and on-device compaction see
+    # bit-identical sample points (jnp.linspace differs by ~1 ulp).
+    t1 = jnp.asarray(ray_t_samples(rcfg))
+    t = jnp.broadcast_to(t1, (n_rays, n_s))
     if rcfg.stratified and key is not None:
         dt = (rcfg.far - rcfg.near) / n_s
         t = t + jax.random.uniform(key, t.shape) * dt
@@ -575,14 +586,31 @@ def _chunk_color(
             sigma = jnp.where(inside, sigma.reshape(n_rays, n_s), 0.0)
             rgb = rgb.reshape(n_rays, n_s, 3)
         else:
-            # Ad-hoc rays: on-device stable compaction (cumsum + scatter).
-            active = inside.reshape(-1) & occupancy_lookup(occ, flat_pts)
+            # Ad-hoc rays: active mask -> stable on-device compaction.
+            # The march kernel and the inline lookup agree bit-exactly
+            # (`ref.ray_march_ref` IS this expression); stratified sampling
+            # perturbs t per ray, which the (S,)-t kernel cannot see.
+            if compaction == "scatter" or (rcfg.stratified and key is not None):
+                active = inside.reshape(-1) & occupancy_lookup(occ, flat_pts)
+            else:
+                active = ops_ray_march(
+                    occ.occ, rays_o, rays_d, t1,
+                    use_pallas=use_pallas, early_stop=early_stop,
+                ).reshape(-1) > 0.5
             B = P if budget is None else min(int(budget), P)
             rank = jnp.cumsum(active) - 1  # (P,) int
             valid = active & (rank < B)  # budget overflow drops samples
-            pos = jnp.where(valid, rank, B)  # B = out of range -> dropped
-            buf_pts = jnp.zeros((B, 3)).at[pos].set(flat_pts, mode="drop")
-            buf_dirs = jnp.zeros((B, 3)).at[pos].set(flat_dirs, mode="drop")
+            if compaction == "march":
+                # Gather compaction: nonzero returns the active flat
+                # indices in increasing order — the same rank order the
+                # scatter writes, so the buffers are byte-identical.
+                (inv_take,) = jnp.nonzero(valid, size=B, fill_value=0)
+                buf_pts = flat_pts[inv_take]
+                buf_dirs = flat_dirs[inv_take]
+            else:
+                pos = jnp.where(valid, rank, B)  # B = out of range -> dropped
+                buf_pts = jnp.zeros((B, 3)).at[pos].set(flat_pts, mode="drop")
+                buf_dirs = jnp.zeros((B, 3)).at[pos].set(flat_dirs, mode="drop")
             sigma_b, rgb_b = field(buf_pts, buf_dirs)
             take = jnp.clip(rank, 0, B - 1)
             sigma = jnp.where(valid, sigma_b[take], 0.0).reshape(n_rays, n_s)
@@ -736,22 +764,126 @@ def _frame_se_impl(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "rcfg", "mode", "budget", "use_pallas", "early_stop"),
+    static_argnames=("cfg", "rcfg", "mode", "budget", "use_pallas",
+                     "early_stop", "compaction"),
 )
 def _frame_colors_impl(
     params, pack, spec, occ, rays_o, rays_d,
-    *, cfg, rcfg, mode, budget, use_pallas, early_stop,
+    *, cfg, rcfg, mode, budget, use_pallas, early_stop, compaction="march",
 ):
     # Image rendering takes arbitrary rays (no precomputed plan): the
     # dynamic compaction path under `budget` applies per chunk.
+    # `compaction="scatter"` keeps the legacy cumsum+scatter strategy (the
+    # pose-stream benchmark's baseline; byte-identical to "march").
     def body(xs):
         ro, rd = xs
         color, _ = _chunk_color(
             params, pack, spec, occ, ro, rd,
             cfg, rcfg, mode, budget, use_pallas, early_stop,
+            compaction=compaction,
         )
         return color
     return jax.lax.map(body, (rays_o, rays_d))
+
+
+# ---------------------------------------------------------------------------
+# Per-slot serve impls: the three pose-cache tiers of `FusedDeviceStep`.
+# ---------------------------------------------------------------------------
+# One jitted call per (slot_rays,)-shaped slot instead of one lax.map over
+# the whole bucket: the bodies were sequential under lax.map anyway, and
+# per-slot dispatch lets a bucket MIX cache-hit / warped-plan / ray-march
+# slots at fixed padded shapes without a retrace (each tier compiles once
+# per shape).
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rcfg", "mode", "budget", "use_pallas",
+                     "early_stop"),
+)
+def _slot_march_impl(
+    params, pack, spec, occ, rays_o, rays_d,
+    *, cfg, rcfg, mode, budget, use_pallas, early_stop,
+):
+    """Cache-miss tier: march render + the TRUE device active count, so
+    the engine detects budget overflow from the returned scalar instead of
+    a host-side mask pass per step (XLA shares the march between the two
+    uses)."""
+    color, _ = _chunk_color(
+        params, pack, spec, occ, rays_o, rays_d,
+        cfg, rcfg, mode, budget, use_pallas, early_stop,
+    )
+    t1 = jnp.asarray(ray_t_samples(rcfg))
+    active = ops_ray_march(
+        occ.occ, rays_o, rays_d, t1,
+        use_pallas=use_pallas, early_stop=early_stop,
+    )
+    return color, jnp.sum(active > 0.5).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rcfg", "mode", "use_pallas", "early_stop"),
+)
+def _slot_plan_impl(
+    params, pack, spec, occ, rays_o, rays_d, plan_row,
+    *, cfg, rcfg, mode, use_pallas, early_stop,
+):
+    """Cache-hit tier: the slot's rays fingerprint-match a baked plan —
+    precomputed gathers, hash corners, and SH bases (CullPlan speed)."""
+    color, _ = _chunk_color(
+        params, pack, spec, occ, rays_o, rays_d,
+        cfg, rcfg, mode, None, use_pallas, early_stop, plan_row=plan_row,
+    )
+    return color
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rcfg", "mode", "use_pallas", "early_stop"),
+)
+def _slot_warp_impl(
+    params, pack, spec, occ, rays_o, rays_d, inv_take, take, valid_cons,
+    *, cfg, rcfg, mode, use_pallas, early_stop,
+):
+    """Warped-plan tier: reuse a nearby pose's CONSERVATIVE compaction
+    indices for these rays. The cached plan contributes indices only —
+    field inputs are the ACTUAL sample points of these rays — and the
+    final mask re-intersects with the exact device march, so a
+    conservative plan that covers every exact-active sample reproduces
+    the march tier's render (same points queried, same samples kept)."""
+    n_rays = rays_o.shape[0]
+    n_s = rcfg.n_samples
+    t1 = jnp.asarray(ray_t_samples(rcfg))
+    t = jnp.broadcast_to(t1, (n_rays, n_s))
+    pts = rays_o[:, None, :] + rays_d[:, None, :] * t[..., None]
+    pts_unit = jnp.clip(pts + 0.5, 0.0, 1.0)
+    flat_pts = pts_unit.reshape(-1, 3)
+    flat_dirs = jnp.broadcast_to(rays_d[:, None, :], pts.shape).reshape(-1, 3)
+    buf_pts = flat_pts[inv_take]
+    buf_dirs = flat_dirs[inv_take]
+    if mode == "fused":
+        sigma_b, rgb_b = fused_ngp_apply(
+            pack, buf_pts, buf_dirs, cfg, use_pallas=use_pallas
+        )
+    else:
+        sigma_b, rgb_b = ngp_apply(params, buf_pts, buf_dirs, cfg, spec)
+    exact = ops_ray_march(
+        occ.occ, rays_o, rays_d, t1,
+        use_pallas=use_pallas, early_stop=early_stop,
+    ).reshape(-1) > 0.5
+    valid = valid_cons & exact
+    sigma = jnp.where(valid, sigma_b[take], 0.0).reshape(n_rays, n_s)
+    rgb = jnp.where(valid[:, None], rgb_b[take], 0.0).reshape(n_rays, n_s, 3)
+    delta = jnp.diff(t, axis=-1)
+    delta = jnp.concatenate(
+        [delta, jnp.full_like(delta[..., :1], 1e10)], axis=-1
+    )
+    color, acc = ops_alpha_composite(
+        sigma, rgb, delta, use_pallas=use_pallas, early_stop=early_stop
+    )
+    if rcfg.white_bg:
+        color = color + (1.0 - acc)
+    return color
 
 
 class FastRenderEngine:

@@ -55,6 +55,34 @@ def _dilate_max3(occ: jnp.ndarray, iterations: int) -> jnp.ndarray:
     return occ
 
 
+def dilate_occupancy(grid: "OccupancyGrid", cells: int) -> "OccupancyGrid":
+    """Grid with every occupied cell grown by `cells` in Chebyshev
+    distance. Any point within `cells / resolution` (L-inf, world units:
+    the box is unit-sized) of an occupied cell of the source grid lands
+    in an occupied cell of the result — the conservative-coverage
+    property the pose-cache warp tier relies on."""
+    if cells <= 0:
+        return grid
+    occ = _dilate_max3(grid.occ, int(cells))
+    return OccupancyGrid(
+        occ=occ, resolution=grid.resolution, threshold=grid.threshold,
+        occupied_fraction=float(jnp.mean(occ)),
+    )
+
+
+def ray_t_samples(rcfg) -> np.ndarray:
+    """THE deterministic eval t-samples: (n_samples,) f32, host-computed.
+
+    Single source of truth shared by every non-stratified path — the
+    host-side plan/budget oracles here AND the device renderer
+    (`fast_render` stages this exact array as a jit constant). Computing
+    t once is what makes plan compaction and on-device compaction
+    byte-identical end-to-end; `np.linspace` vs `jnp.linspace` differ by
+    ~1 ulp and used to be the only divergence between the two paths.
+    """
+    return np.linspace(rcfg.near, rcfg.far, rcfg.n_samples, dtype=np.float32)
+
+
 def bake_occupancy(
     params: Dict,
     cfg,  # NGPConfig
@@ -179,6 +207,7 @@ def sample_active_mask(
     rays_o: np.ndarray,  # (..., 3)
     rays_d: np.ndarray,  # (..., 3)
     rcfg,  # RenderConfig (deterministic eval sampling)
+    margin: float = 0.0,
 ):
     """Host-side oracle for which samples the renderer may cull.
 
@@ -187,15 +216,26 @@ def sample_active_mask(
     the single source of truth shared by `cull_budget` and the renderer's
     `CullPlan` builder — the two must count identically or budgets
     silently under-cover.
+
+    `margin > 0` (world units) computes the CONSERVATIVE mask used by
+    warped pose-cache plans: the box test expands by `margin` and the
+    occupancy dilates by `ceil(margin * resolution)` cells, so the
+    returned mask is a superset of the exact (`margin=0`) mask of ANY ray
+    set whose per-sample points deviate from these by at most `margin`
+    in L-inf.
     """
     ro = np.asarray(rays_o, np.float32)
     rd = np.asarray(rays_d, np.float32)
-    t = np.linspace(rcfg.near, rcfg.far, rcfg.n_samples, dtype=np.float32)
+    t = ray_t_samples(rcfg)
     pts = ro[..., None, :] + rd[..., None, :] * t[:, None]
-    inside = np.all((pts > -0.5) & (pts < 0.5), axis=-1)
+    lo, hi = -0.5 - margin, 0.5 + margin
+    inside = np.all((pts > lo) & (pts < hi), axis=-1)
     g = grid.resolution
+    occ = grid.occ
+    if margin > 0.0:
+        occ = _dilate_max3(occ, int(np.ceil(margin * g)))
     cell = np.clip(((pts + 0.5) * g).astype(np.int64), 0, g - 1)
-    occ_np = np.asarray(grid.occ) > 0.5
+    occ_np = np.asarray(occ) > 0.5
     return inside & occ_np[cell[..., 0], cell[..., 1], cell[..., 2]], pts
 
 

@@ -226,12 +226,147 @@ def test_lookup_block_empty_table_default():
 
 def test_committed_table_entries_well_formed():
     """The committed autotune_table.json (if present) parses and every
-    entry carries the fields lookup/never-loses need, MXU-aligned."""
+    entry carries the fields lookup/never-loses need — matmul entries
+    MXU-aligned, ray-march entries tagged with their own shape keys."""
     table = autotune.load_table()
     for key, entries in table.get("entries", {}).items():
         for e in entries:
+            if e.get("kernel") == "ray_march":
+                for f in ("r", "s", "g", "br", "bs", "bt", "ms",
+                          "default_ms"):
+                    assert f in e, (key, e)
+                continue
             for f in ("m", "k", "n", "bits", "bm", "bn", "bk", "ms",
                       "default_ms"):
                 assert f in e, (key, e)
             assert e["bm"] % 128 == 0 and e["bn"] % 128 == 0
             assert e["bk"] % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# Occupancy ray-march: the ad-hoc serve fast path. The kernel's {0,1}
+# active mask must be bit-identical to `ref.ray_march_ref` for every
+# block choice, with and without early termination, including degenerate
+# rays (zero direction, origins outside the box) and ragged R/S/G that
+# force padding in every axis.
+# ---------------------------------------------------------------------------
+def _march_operands(r=70, s=9, g=16, seed=3):
+    rng = np.random.RandomState(seed)
+    occ = jnp.asarray((rng.rand(g, g, g) < 0.3).astype(np.float32))
+    ro = jnp.asarray(rng.randn(r, 3).astype(np.float32) * 0.4)
+    rd = rng.randn(r, 3).astype(np.float32)
+    rd = jnp.asarray(rd / np.linalg.norm(rd, axis=1, keepdims=True))
+    t = jnp.asarray(np.linspace(0.03, 2.2, s, dtype=np.float32))
+    return occ, ro, rd, t
+
+
+@pytest.mark.parametrize("br,bs,bt", [(16, 4, 256), (32, 8, 128),
+                                      (128, 8, 512)])
+def test_ray_march_parity_block_invariance(br, bs, bt):
+    occ, ro, rd, t = _march_operands()
+    want = ref.ray_march_ref(occ, ro, rd, t)
+    got = ops.ray_march(occ, ro, rd, t, use_pallas=True,
+                        br=br, bs=bs, bt=bt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("early_stop", [True, False])
+def test_ray_march_early_stop_invariance(early_stop):
+    """Early termination skips only provably-outside sample chunks, so
+    toggling it never changes the mask."""
+    occ, ro, rd, t = _march_operands()
+    want = ref.ray_march_ref(occ, ro, rd, t)
+    got = ops.ray_march(occ, ro, rd, t, use_pallas=True,
+                        br=16, bs=4, bt=256, early_stop=early_stop)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ray_march_degenerate_rays_exact_zero_rows():
+    """Zero-direction rays parked far outside the box and rays that
+    never enter the box must produce exact all-zero mask rows."""
+    g = 8
+    rng = np.random.RandomState(5)
+    occ = jnp.ones((g, g, g), jnp.float32)
+    ro = np.zeros((6, 3), np.float32)
+    rd = np.zeros((6, 3), np.float32)
+    ro[0] = (10.0, 10.0, 10.0)          # parked outside, zero direction
+    ro[1] = (0.0, 5.0, 0.0)             # above the box ...
+    rd[1] = (1.0, 0.0, 0.0)             # ... marching parallel to it
+    ro[2] = (0.0, 0.0, 0.0)             # inside, zero direction: stays in
+    ro[3:] = rng.randn(3, 3) * 0.3
+    rd[3:] = rng.randn(3, 3)
+    t = jnp.asarray(np.linspace(0.05, 3.0, 7, dtype=np.float32))
+    want = np.asarray(ref.ray_march_ref(occ, jnp.asarray(ro),
+                                        jnp.asarray(rd), t))
+    got = np.asarray(ops.ray_march(occ, jnp.asarray(ro), jnp.asarray(rd),
+                                   t, use_pallas=True,
+                                   br=16, bs=4, bt=64))
+    np.testing.assert_array_equal(got, want)
+    assert not want[0].any() and not want[1].any()
+    assert want[2].all()  # origin cell is occupied at every t
+
+
+@pytest.mark.parametrize("r,s,g", [(1, 1, 4), (70, 9, 8), (130, 17, 16)])
+def test_ray_march_ragged_shapes(r, s, g):
+    occ, ro, rd, t = _march_operands(r=r, s=s, g=g, seed=7)
+    want = ref.ray_march_ref(occ, ro, rd, t)
+    got = ops.ray_march(occ, ro, rd, t, use_pallas=True,
+                        br=16, bs=4, bt=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ray_march_autotune_dispatch_matches_ref():
+    """ops.ray_march with no explicit blocks pulls (br, bs, bt) from the
+    autotune table — whatever it picks, the mask is still exact."""
+    occ, ro, rd, t = _march_operands(r=40, s=8, g=8, seed=11)
+    want = ref.ray_march_ref(occ, ro, rd, t)
+    got = ops.ray_march(occ, ro, rd, t, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Autotune table: ray-march entries share the per-backend list with the
+# matmul entries, tagged `"kernel": "ray_march"`; each lookup must see
+# only its own kind.
+# ---------------------------------------------------------------------------
+_RM_TABLE = {"entries": {"test:backend": [
+    {"m": 4096, "k": 16, "n": 16, "bits": 8,
+     "bm": 512, "bn": 128, "bk": 128, "ms": 1.0, "default_ms": 2.0},
+    {"kernel": "ray_march", "r": 512, "s": 16, "g": 32,
+     "br": 64, "bs": 4, "bt": 256, "ms": 1.0, "default_ms": 2.0},
+    {"kernel": "ray_march", "r": 4096, "s": 32, "g": 128,
+     "br": 256, "bs": 16, "bt": 1024, "ms": 1.0, "default_ms": 2.0},
+]}}
+
+
+def test_lookup_ray_march_nearest_and_default():
+    got = autotune.lookup_ray_march(600, 16, 32, table=_RM_TABLE,
+                                    key="test:backend")
+    assert got == (64, 4, 256)
+    got = autotune.lookup_ray_march(5000, 24, 128, table=_RM_TABLE,
+                                    key="test:backend")
+    assert got == (256, 16, 1024)
+    assert autotune.lookup_ray_march(
+        100, 8, 16, table={"entries": {}}, key="x"
+    ) == autotune.RAY_MARCH_DEFAULT
+
+
+def test_lookup_kinds_do_not_cross_contaminate():
+    """lookup_block never returns a ray-march entry and vice versa, even
+    when the other kind is the nearest row in the shared list."""
+    got = autotune.lookup_block(4096, 16, 16, 8, table=_RM_TABLE,
+                                key="test:backend")
+    assert got == (512, 128, 128)
+    only_march = {"entries": {"test:backend": [
+        e for e in _RM_TABLE["entries"]["test:backend"]
+        if e.get("kernel") == "ray_march"
+    ]}}
+    assert autotune.lookup_block(
+        4096, 16, 16, 8, table=only_march, key="test:backend"
+    ) == autotune.DEFAULT_BLOCK
+    only_mm = {"entries": {"test:backend": [
+        e for e in _RM_TABLE["entries"]["test:backend"] if "kernel" not in e
+    ]}}
+    assert autotune.lookup_ray_march(
+        512, 16, 32, table=only_mm, key="test:backend"
+    ) == autotune.RAY_MARCH_DEFAULT

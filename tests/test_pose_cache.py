@@ -1,0 +1,324 @@
+"""Pose-grid plan cache: quantization, conservativeness, LRU policy, and
+the serve engine's hit/warp/march tier progression.
+
+The load-bearing property (pinned here both host-side and end-to-end):
+a plan built with coverage margin `m` never culls a sample that the
+exact plan of ANY rays within `m` L-inf deviation would keep — so the
+warp tier's colors are byte-identical to the march tier's, and every
+tier sits inside the 1e-3 dB PSNR band of the legacy scatter path.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.nerf.hash_encoding import HashEncodingConfig
+from repro.nerf.ngp import NGPConfig
+from repro.nerf.occupancy import OccupancyGrid, sample_active_mask
+from repro.nerf.pose_cache import (
+    PoseGridConfig,
+    PosePlanCache,
+    build_warp_plan,
+    pose_cell_key,
+    ray_fingerprint,
+    warp_deviation,
+)
+from repro.nerf.render import RenderConfig
+
+RCFG = RenderConfig(n_samples=8, stratified=False)
+
+
+def _occ(g=8, frac=0.4, seed=7):
+    rng = np.random.RandomState(seed)
+    import jax.numpy as jnp
+
+    return OccupancyGrid(
+        occ=jnp.asarray((rng.rand(g, g, g) < frac).astype(np.float32)),
+        resolution=g, threshold=0.0, occupied_fraction=frac,
+    )
+
+
+def _rays(n=8, seed=0):
+    rng = np.random.RandomState(seed)
+    ro = rng.uniform(-0.35, 0.35, size=(n, 3)).astype(np.float32)
+    rd = rng.normal(size=(n, 3)).astype(np.float32)
+    rd /= np.linalg.norm(rd, axis=-1, keepdims=True)
+    return ro, rd
+
+
+# ---------------------------------------------------------------------------
+# Pose-cell quantization + fingerprints + deviation bound
+# ---------------------------------------------------------------------------
+def test_pose_cell_key_deterministic_and_shift_sensitive():
+    ro, rd = _rays()
+    k1 = pose_cell_key(ro, rd, 0.05, 0.05)
+    k2 = pose_cell_key(ro.copy(), rd.copy(), 0.05, 0.05)
+    assert k1 == k2 and len(k1) == 9
+    assert all(isinstance(v, int) for v in k1)
+    # A full-cell translation always changes the position part.
+    k3 = pose_cell_key(ro + np.float32(0.05), rd, 0.05, 0.05)
+    assert k3[:3] != k1[:3] and k3[3:] == k1[3:]
+    # Reshaped (H, W, 3) bundles key identically to flat (N, 3).
+    k4 = pose_cell_key(ro.reshape(2, 4, 3), rd.reshape(2, 4, 3), 0.05, 0.05)
+    assert k4 == k1
+
+
+def test_ray_fingerprint_content_hash():
+    ro, rd = _rays()
+    assert ray_fingerprint(ro, rd) == ray_fingerprint(ro.copy(), rd.copy())
+    ro2 = ro.copy()
+    ro2[3, 1] += np.float32(1e-6)
+    assert ray_fingerprint(ro2, rd) != ray_fingerprint(ro, rd)
+
+
+def test_warp_deviation_bound_and_shape_mismatch():
+    ro, rd = _rays()
+    assert warp_deviation(ro, rd, ro, rd, RCFG) == 0.0
+    got = warp_deviation(ro + np.float32(0.01), rd, ro, rd, RCFG)
+    assert abs(got - 0.01) < 1e-6
+    # Direction deviation scales by t_far = max(|near|, |far|).
+    rd2 = rd.copy()
+    rd2[0, 0] += np.float32(0.002)
+    got = warp_deviation(ro, rd2, ro, rd, RCFG)
+    assert abs(got - 0.002 * max(abs(RCFG.near), abs(RCFG.far))) < 1e-6
+    assert warp_deviation(ro[:4], rd[:4], ro, rd, RCFG) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Conservativeness: the margin-m mask covers the exact mask of any rays
+# within m L-inf — the property that makes warped plans safe to reuse.
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    frac=st.floats(min_value=0.05, max_value=0.95),
+)
+def test_warp_margin_mask_is_superset_of_jittered_exact(seed, frac):
+    rng = np.random.RandomState(seed)
+    occ = _occ(g=8, frac=frac, seed=seed)
+    ro, rd = _rays(n=8, seed=seed + 1)
+    margin = PoseGridConfig().margin(occ)  # 1 occ cell in world units
+
+    cons, _ = sample_active_mask(occ, ro, rd, RCFG, margin=margin)
+    t_far = max(abs(RCFG.near), abs(RCFG.far))
+    # Split the deviation budget between origin and direction jitter so
+    # d_o + t_far * d_d <= margin (the warp_deviation admission test).
+    d_o = margin * 0.5
+    d_d = (margin * 0.5) / t_far
+    ro_j = ro + rng.uniform(-d_o, d_o, ro.shape).astype(np.float32)
+    rd_j = rd + rng.uniform(-d_d, d_d, rd.shape).astype(np.float32)
+    assert warp_deviation(ro_j, rd_j, ro, rd, RCFG) <= margin + 1e-6
+
+    exact_j, _ = sample_active_mask(occ, ro_j, rd_j, RCFG)
+    assert np.all(cons | ~exact_j), (
+        "conservative mask culled a sample the jittered exact mask keeps"
+    )
+
+
+def test_build_warp_plan_invariants():
+    cfg = NGPConfig(
+        hash=HashEncodingConfig(n_levels=4, log2_table_size=9,
+                                base_resolution=4, max_resolution=32),
+        hidden_dim=16, color_hidden_dim=16, geo_feat_dim=7, sh_degree=2,
+    )
+    occ = _occ()
+    ro, rd = _rays(n=16, seed=3)
+    margin = 1.0 / occ.resolution
+    plan = build_warp_plan(occ, ro, rd, RCFG, cfg, margin)
+
+    P = ro.shape[0] * RCFG.n_samples
+    cons = np.asarray(plan.valid_cons)
+    exact = np.asarray(plan.plan_row[3])
+    assert cons.shape == exact.shape == (P,)
+    assert np.all(cons | ~exact)  # conservative superset of exact
+    # take/inv_take round-trip on every conservative-active sample.
+    take = np.asarray(plan.take)
+    inv = np.asarray(plan.inv_take)
+    idx = np.nonzero(cons)[0]
+    assert plan.budget % 128 == 0 and plan.budget >= idx.size
+    np.testing.assert_array_equal(inv[take[idx]], idx)
+    assert plan.fp == ray_fingerprint(ro, rd)
+    assert plan.nbytes > 0
+    L = cfg.hash.n_levels
+    assert np.asarray(plan.plan_row[4]).shape == (L, plan.budget, 8)
+
+
+# ---------------------------------------------------------------------------
+# PosePlanCache policy: LRU, pin-aware eviction, drop_scene, stats
+# ---------------------------------------------------------------------------
+def test_pose_cache_lru_and_use_counts():
+    c = PosePlanCache(max_entries=2)
+    a, b, d = ("s", 1), ("s", 2), ("s", 3)
+    assert c.note_use(a).uses == 1
+    assert c.note_use(a).uses == 2
+    c.note_use(b)
+    c.note_use(a)  # a is MRU
+    c.note_use(d)  # capacity 2 -> b (LRU) evicted
+    assert c.get(b) is None and c.get(a) is not None and c.get(d) is not None
+    assert c.stats()["evictions"] == 1
+    assert len(c) == 2
+
+
+def test_pose_cache_never_evicts_pinned():
+    c = PosePlanCache(max_entries=1)
+    a, b, d = ("s", 1), ("s", 2), ("s", 3)
+    c.note_use(a)
+    c.pin(a)
+    c.note_use(b)  # a pinned: cache runs over capacity, b evicts nothing
+    assert c.get(a) is not None
+    c.note_use(d)  # b unpinned and LRU -> evicted
+    assert c.get(b) is None and c.get(a) is not None
+    c.pin(a)  # pins are counted
+    c.unpin(a)
+    assert c.pinned(a)
+    c.unpin(a)
+    assert not c.pinned(a)
+    c.note_use(("s", 4))
+    c.note_use(("s", 5))
+    assert c.get(a) is None  # unpinned: evictable again
+
+
+def test_pose_cache_drop_scene_removes_even_pinned():
+    c = PosePlanCache(max_entries=8)
+    c.note_use(("a", 1))
+    c.note_use(("a", 2))
+    c.note_use(("b", 1))
+    c.pin(("a", 1))
+    assert c.drop_scene("a") == 2
+    assert c.get(("a", 1)) is None and c.get(("b", 1)) is not None
+    assert c.stats()["cells"] == 1
+
+
+def test_pose_cache_stats_shape():
+    c = PosePlanCache(max_entries=4)
+    got = c.stats()
+    assert set(got) == {"cells", "bytes", "hits", "warps", "misses",
+                        "builds", "evictions"}
+    assert all(v == 0 for v in got.values())
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: the real tiers on a real (tiny) quantized scene
+# ---------------------------------------------------------------------------
+from repro.core import SceneScale, build_scene_env  # noqa: E402
+
+TINY = SceneScale.tiny()
+HW = 12  # 144 rays/request -> 3 items at slot_rays=64
+
+
+@pytest.fixture(scope="module")
+def tiny_artifact():
+    import repro.hero as hero
+
+    env = build_scene_env("chair", TINY, seed=0)
+    rng = np.random.RandomState(3)
+    bits = rng.randint(4, 9, size=env.n_units).tolist()
+    return hero.compile(env, bits)
+
+
+def _orbit(theta, height, hw=HW):
+    import jax.numpy as jnp
+
+    from repro.nerf.scenes import camera_rays
+
+    c, s = np.cos(theta), np.sin(theta)
+    c2w = np.asarray(
+        [[c, 0.0, -s, 2.0 * s], [0.0, 1.0, 0.0, height],
+         [s, 0.0, c, 2.0 * c]], np.float32,
+    )
+    ro, rd = camera_rays(jnp.asarray(c2w), hw, hw * 1.2)
+    return np.asarray(ro).reshape(-1, 3), np.asarray(rd).reshape(-1, 3)
+
+
+def _engine(artifact, **over):
+    from repro.hero.engine import ServeEngine
+    from repro.hero.scheduler import EngineConfig
+
+    cfg = EngineConfig(slots=4, slot_rays=64, **over)
+    return ServeEngine({artifact.scene: artifact}, cfg)
+
+
+def _psnr(a, b):
+    se = float(((a - b) ** 2).mean())
+    return float(-10.0 * np.log10(max(se, 1e-12)))
+
+
+def test_engine_tier_progression_and_parity(tiny_artifact):
+    """One pose revisited: miss -> miss+build -> hit; in-cell jitter ->
+    warp. March colors are byte-identical to the scatter engine's, warp
+    colors byte-identical to the hit tier's, PSNR deltas pinned 0."""
+    scene = tiny_artifact.scene
+    eng = _engine(tiny_artifact)
+    eng_scatter = _engine(tiny_artifact, compaction="scatter")
+    stepper = eng._stepper
+    # Height 0.11 sits mid-cell (pos_cell 0.05): jitter can't straddle.
+    ro, rd = _orbit(0.3, 0.11)
+
+    march = eng.render(ro, rd, scene=scene)  # visit 1: miss, no build
+    s1 = dict(stepper.pose_stats())
+    assert s1["misses"] == 3 and s1["builds"] == 0 and s1["cells"] == 1
+
+    ref = eng_scatter.render(ro, rd, scene=scene)
+    np.testing.assert_array_equal(march, ref)
+
+    again = eng.render(ro, rd, scene=scene)  # visit 2: miss + build
+    s2 = dict(stepper.pose_stats())
+    assert s2["builds"] == 3 and s2["hits"] == 0 and s2["bytes"] > 0
+    np.testing.assert_array_equal(again, march)
+
+    hit = eng.render(ro, rd, scene=scene)  # visit 3: every item hits
+    s3 = dict(stepper.pose_stats())
+    assert s3["hits"] == 3 and s3["builds"] == 3
+    np.testing.assert_array_equal(hit, march)
+
+    # Warp: jitter within the cell AND the coverage margin. Retry signs
+    # and scales — a pose component can sit on a quantization boundary.
+    key0 = stepper.pose_key(scene, ro, rd)
+    warped = None
+    for eps in (1e-4, -1e-4, 5e-5, -5e-5):
+        ro_j = ro + np.float32(eps)
+        if stepper.pose_key(scene, ro_j, rd) != key0:
+            continue
+        before = stepper.pose_stats()["warps"]
+        got = eng.render(ro_j, rd, scene=scene)
+        if stepper.pose_stats()["warps"] == before:
+            continue
+        warped = (ro_j, got)
+        break
+    assert warped is not None, "no jitter landed in the warp tier"
+    ro_j, warp = warped
+    ref_j = eng_scatter.render(ro_j, rd, scene=scene)
+    np.testing.assert_array_equal(warp, ref_j)
+    assert abs(_psnr(warp, ref) - _psnr(ref_j, ref)) <= 1e-3  # dB band
+
+
+def test_engine_plan_bytes_charged_to_resident(tiny_artifact):
+    scene = tiny_artifact.scene
+    eng = _engine(tiny_artifact)
+    ro, rd = _orbit(1.1, 0.16)
+    base = eng.stats()["cache"]["resident_bytes"]
+    eng.render(ro, rd, scene=scene)
+    eng.render(ro, rd, scene=scene)  # second visit bakes plans
+    st = eng.stats()
+    plan_bytes = st["pose_cache"]["bytes"]
+    assert plan_bytes > 0
+    assert st["cache"]["resident_bytes"] == base + plan_bytes
+
+
+def test_engine_pose_cache_off_and_scatter_disable_tiers(tiny_artifact):
+    ro, rd = _orbit(2.0, 0.21)
+    for over in ({"pose_cache": False}, {"compaction": "scatter"}):
+        eng = _engine(tiny_artifact, **over)
+        eng.render(ro, rd, scene=tiny_artifact.scene)
+        assert eng.stats()["pose_cache"] is None
+
+
+def test_engine_fresh_poses_build_nothing(tiny_artifact):
+    """Never-revisited poses stay in the march tier: zero plan builds,
+    zero bytes — the fresh-stream fast path costs no baking."""
+    scene = tiny_artifact.scene
+    eng = _engine(tiny_artifact)
+    for theta in (0.4, 1.3, 2.2, 3.1):
+        eng.render(*_orbit(theta, 0.13), scene=scene)
+    st = eng.stats()["pose_cache"]
+    assert st["builds"] == 0 and st["bytes"] == 0 and st["hits"] == 0
+    assert st["cells"] == 4 and st["misses"] == 12
